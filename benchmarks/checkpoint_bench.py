@@ -1,0 +1,41 @@
+"""Framework-level durable store benchmark: checkpoint commit latency and
+fsync counts, SOFT mode vs link-free mode (pointer-persist) -- the paper's
+psync economy applied to training state."""
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.store.checkpoint import CheckpointManager
+from benchmarks.common import Result, fmt_row
+
+
+def run(quick: bool = False):
+    rows = []
+    mb = 4 if quick else 32
+    tree = {f"layer_{i}": np.random.default_rng(i).standard_normal(
+        (mb * 1024 * 1024 // 8 // 8,)).astype(np.float64) for i in range(8)}
+    for mode in ("soft", "linkfree"):
+        d = tempfile.mkdtemp()
+        m = CheckpointManager(d, mode=mode, keep=2)
+        t0 = time.perf_counter()
+        steps = 3
+        for s in range(steps):
+            m.save(s, tree)
+        dt = time.perf_counter() - t0
+        fsyncs = m.fsyncs
+        m.close()
+        shutil.rmtree(d)
+        total_mb = mb * steps
+        res = Result(ops_per_sec=steps / dt, psync_per_op=0,
+                     psync_per_update=fsyncs / steps, rounds=steps)
+        rows.append(fmt_row(f"checkpoint_{mode}_{mb}MB", res, {
+            "MBps": f"{total_mb / dt:.1f}",
+            "fsync_per_step": f"{fsyncs / steps:.1f}"}))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,89 @@
+"""Shared driver for the paper's throughput experiments.
+
+Maps the paper's per-thread mixed workload onto batched lanes: each
+"round" splits the lane budget into contains / insert / remove lanes by
+the read percentage, mirroring the 50-50 insert/remove split of Section 6.
+Reports ops/sec (wall clock, jitted, warmed) and simulated psyncs/op --
+the quantity the paper's NVM throughput is proportional to.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import durable_set as DS
+
+
+@dataclass
+class Result:
+    ops_per_sec: float
+    psync_per_op: float
+    psync_per_update: float
+    rounds: int
+
+
+def run_workload(mode: str, index: str, capacity: int, key_range: int,
+                 batch: int, read_pct: int, rounds: int = 30,
+                 seed: int = 0, prefill: bool = True) -> Result:
+    rng = np.random.default_rng(seed)
+    state = DS.make_state(capacity)
+    if prefill:      # paper: fill with half the key range
+        keys = rng.choice(key_range, key_range // 2, replace=False)
+        for i in range(0, len(keys), batch):
+            chunk = np.resize(keys[i:i + batch], batch).astype(np.int32)
+            state, _ = DS.insert_batch(state, jnp.asarray(chunk),
+                                       jnp.asarray(chunk), mode=mode,
+                                       index=index)
+
+    n_read = batch * read_pct // 100
+    n_ins = (batch - n_read) // 2
+    n_rem = batch - n_read - n_ins
+
+    @jax.jit
+    def round_fn(state, kr, ki, km):
+        state, _ = DS.contains_batch(state, kr, mode=mode, index=index)
+        if n_ins:
+            state, _ = DS.insert_batch(state, ki, ki, mode=mode, index=index)
+        if n_rem:
+            state, _ = DS.remove_batch(state, km, mode=mode, index=index)
+        return state
+
+    def keysets():
+        return (jnp.asarray(rng.integers(0, key_range, max(n_read, 1)),
+                            jnp.int32),
+                jnp.asarray(rng.integers(0, key_range, max(n_ins, 1)),
+                            jnp.int32),
+                jnp.asarray(rng.integers(0, key_range, max(n_rem, 1)),
+                            jnp.int32))
+
+    # warm up compile
+    state = round_fn(state, *keysets())
+    jax.block_until_ready(state.keys)
+    p0 = int(state.n_psync)
+    o0 = int(state.n_ops)
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        state = round_fn(state, *keysets())
+    jax.block_until_ready(state.keys)
+    dt = time.perf_counter() - t0
+    d_ops = int(state.n_ops) - o0
+    d_psync = int(state.n_psync) - p0
+    updates = max((n_ins + n_rem) * rounds, 1)
+    assert not bool(state.overflow), "capacity overflow in benchmark"
+    return Result(ops_per_sec=d_ops / dt,
+                  psync_per_op=d_psync / max(d_ops, 1),
+                  psync_per_update=d_psync / updates,
+                  rounds=rounds)
+
+
+def fmt_row(name: str, res: Result, extra: Dict = ()) -> str:
+    us_per_call = 1e6 / max(res.ops_per_sec, 1e-9)
+    derived = f"psync_per_update={res.psync_per_update:.3f}"
+    for k, v in dict(extra or {}).items():
+        derived += f";{k}={v}"
+    return f"{name},{us_per_call:.3f},{derived}"

@@ -1,0 +1,25 @@
+"""Paper Fig. 2: throughput as a function of key range (90% reads)."""
+from benchmarks.common import run_workload, fmt_row
+
+MODES = ("soft", "linkfree", "logfree")
+
+
+def run(quick: bool = False):
+    rows = []
+    scan_ranges = (16, 64, 256) if quick else (16, 64, 256, 1024, 4096)
+    probe_ranges = (1 << 10, 1 << 14) if quick else (1 << 10, 1 << 14, 1 << 18)
+    for kr in scan_ranges:
+        for mode in MODES:
+            r = run_workload(mode, "scan", max(4 * kr, 64), kr, 64, 90,
+                             rounds=8 if quick else 20)
+            rows.append(fmt_row(f"fig2_list_range{kr}_{mode}", r))
+    for kr in probe_ranges:
+        for mode in MODES:
+            r = run_workload(mode, "probe", 2 * kr, kr, 256, 90,
+                             rounds=8 if quick else 20)
+            rows.append(fmt_row(f"fig2_hash_range{kr}_{mode}", r))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,38 @@
+"""Section 2.3 / Cohen et al. bound check: psyncs per operation by type.
+SOFT must hit exactly 1 per update / 0 per read; link-free 1 per update
+uncontended; log-free ~2 per update.  This is the paper's analytical core
+and is hardware-independent."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import durable_set as DS
+from benchmarks.common import Result, fmt_row
+
+
+def run(quick: bool = False):
+    rows = []
+    n = 2048
+    for mode in ("soft", "linkfree", "logfree"):
+        state = DS.make_state(4 * n)
+        keys = jnp.arange(n, dtype=jnp.int32)
+        t0 = time.perf_counter()
+        state, _ = DS.insert_batch(state, keys, keys, mode=mode)
+        p_ins = int(state.n_psync)
+        state, _ = DS.contains_batch(state, keys, mode=mode)
+        p_con = int(state.n_psync) - p_ins
+        state, _ = DS.remove_batch(state, keys, mode=mode)
+        p_rem = int(state.n_psync) - p_ins - p_con
+        dt = time.perf_counter() - t0
+        res = Result(ops_per_sec=3 * n / dt, psync_per_op=0,
+                     psync_per_update=(p_ins + p_rem) / (2 * n), rounds=1)
+        rows.append(fmt_row(f"psync_bound_{mode}", res, {
+            "insert": f"{p_ins / n:.3f}", "contains": f"{p_con / n:.3f}",
+            "remove": f"{p_rem / n:.3f}"}))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,25 @@
+"""Paper Fig. 3: throughput as a function of read percentage (covers YCSB
+A=50%, B=95%, C=100%)."""
+from benchmarks.common import run_workload, fmt_row
+
+MODES = ("soft", "linkfree", "logfree")
+
+
+def run(quick: bool = False):
+    rows = []
+    pcts = (50, 90, 100) if quick else (50, 60, 70, 80, 90, 95, 100)
+    for pct in pcts:
+        for mode in MODES:
+            r = run_workload(mode, "probe", 1 << 16, 1 << 15, 256, pct,
+                             rounds=8 if quick else 20)
+            rows.append(fmt_row(f"fig3_hash_reads{pct}_{mode}", r))
+    for pct in (50, 90, 100) if not quick else (90,):
+        for mode in MODES:
+            r = run_workload(mode, "scan", 1024, 256, 64, pct,
+                             rounds=8 if quick else 20)
+            rows.append(fmt_row(f"fig3_list256_reads{pct}_{mode}", r))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,47 @@
+"""Section 2.1/6: recovery-scan cost vs set size (crash -> rebuilt set),
+plus the Pallas recovery_scan kernel vs the jnp reference."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import durable_set as DS
+from repro.kernels.recovery_scan.ops import recovery_scan
+from benchmarks.common import Result, fmt_row
+
+
+def run(quick: bool = False):
+    rows = []
+    sizes = (1 << 12, 1 << 14) if quick else (1 << 12, 1 << 15, 1 << 18)
+    for n in sizes:
+        state = DS.make_state(n)
+        keys = jnp.arange(n // 2, dtype=jnp.int32)
+        state, _ = DS.insert_batch(state, keys, keys, mode="soft")
+        u = jnp.zeros((n,), jnp.float32)
+        rec = jax.jit(DS.crash_and_recover)
+        s2 = rec(state, u)
+        jax.block_until_ready(s2.table)
+        t0 = time.perf_counter()
+        s2 = rec(state, u)
+        jax.block_until_ready(s2.table)
+        dt = time.perf_counter() - t0
+        assert int(s2.size) == n // 2
+        res = Result(ops_per_sec=n / dt, psync_per_op=0.0,
+                     psync_per_update=0.0, rounds=1)
+        rows.append(fmt_row(f"recovery_n{n}", res,
+                            {"nodes_per_sec": f"{n / dt:.0f}"}))
+        # kernel-only validity scan
+        persisted = s2.cur
+        t0 = time.perf_counter()
+        mask, hist = recovery_scan(persisted, use_pallas=False)
+        jax.block_until_ready(hist)
+        dt2 = time.perf_counter() - t0
+        rows.append(fmt_row(
+            f"recovery_scan_ref_n{n}",
+            Result(n / dt2, 0, 0, 1), {"live": int(hist[3])}))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

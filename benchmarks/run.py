@@ -1,0 +1,35 @@
+"""Benchmark entry point: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  --quick trims sizes for CI."""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (scalability, key_range, read_pct, psync_counts,
+                            recovery, checkpoint_bench)
+    suites = {
+        "psync_counts": psync_counts,    # paper's analytical bound first
+        "scalability": scalability,      # Fig 1
+        "key_range": key_range,          # Fig 2
+        "read_pct": read_pct,            # Fig 3
+        "recovery": recovery,            # Sec 2.1/6
+        "checkpoint": checkpoint_bench,  # framework-level (DESIGN.md §3)
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, mod in suites.items():
+        if only and name not in only:
+            continue
+        for row in mod.run(quick=args.quick):
+            print(row)
+            sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

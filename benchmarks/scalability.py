@@ -1,0 +1,31 @@
+"""Paper Fig. 1: throughput as a function of parallelism (batch lanes play
+the role of threads).  Lists (scan index, 256/1024 keys) + hash (probe)."""
+from benchmarks.common import run_workload, fmt_row
+
+MODES = ("soft", "linkfree", "logfree")
+
+
+def run(quick: bool = False):
+    rows = []
+    lanes = (4, 16, 64) if quick else (4, 16, 64, 256)
+    for key_range, index, cap in ((256, "scan", 1024), (1024, "scan", 4096),
+                                  (1 << 16, "probe", 1 << 17)):
+        if quick and key_range == 1024:
+            continue
+        for b in lanes:
+            base = None
+            for mode in MODES:
+                r = run_workload(mode, index, cap, key_range, b, 90,
+                                 rounds=8 if quick else 20)
+                if mode == "logfree":
+                    base = r.ops_per_sec
+                rows.append((f"fig1_{index}{key_range}_lanes{b}_{mode}", r,
+                             {}))
+            # speedup over the log-free baseline (the paper's headline)
+            for name, r, ex in rows[-3:]:
+                ex["speedup_vs_logfree"] = f"{r.ops_per_sec / base:.2f}"
+    return [fmt_row(n, r, ex) for n, r, ex in rows]
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

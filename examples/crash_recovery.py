@@ -1,0 +1,39 @@
+"""Focused reproduction of the paper's recovery semantics: drive the
+stage-machine NVM adversary through torn states and show what recovery
+keeps, for both algorithms plus the instruction-level oracle.
+
+Run:  PYTHONPATH=src python examples/crash_recovery.py
+"""
+import numpy as np
+
+from repro.core import OracleSet
+from repro.core.oracle import FREE, INVALID, PAYLOAD, VALID, DELETED
+
+NAMES = {FREE: "FREE", INVALID: "INVALID", PAYLOAD: "PAYLOAD",
+         VALID: "VALID", DELETED: "DELETED"}
+
+
+def main():
+    for mode in ("linkfree", "soft"):
+        print(f"--- {mode}: crash at every durable event of insert(7) ---")
+        for crash_at in range(8):
+            o = OracleSet(8, mode=mode)
+            o.insert(1, 10)                       # completed before crash
+            res = o.insert(7, 70, budget=crash_at)
+            img = o.crash([0] * 8)                # most adversarial eviction
+            rec = OracleSet.recover(img)
+            stages = [NAMES[s] for s, _, _ in img[:3]]
+            ok, msg = o.check_recovery(rec)
+            status = "pending" if res is None else f"returned {res}"
+            print(f"  crash@{crash_at}: insert(7) {status:14s} "
+                  f"recovered={sorted(rec)} node-stages={stages} -> {msg}")
+            assert ok and 1 in rec
+        print()
+    print("Key property shown above: a pending insert may or may not "
+          "survive, but ONLY atomically (never a torn node), and every "
+          "completed operation always survives -- durable linearizability "
+          "(Definitions B.19/C.17 of the paper).")
+
+
+if __name__ == "__main__":
+    main()

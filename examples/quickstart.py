@@ -1,0 +1,38 @@
+"""Quickstart: durable lock-free sets (link-free & SOFT) in JAX.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DurableSet
+
+
+def main():
+    for mode in ("soft", "linkfree", "logfree"):
+        s = DurableSet(capacity=1024, mode=mode)
+
+        # batched ops: one batch == many racing "threads"
+        keys = np.arange(100, dtype=np.int32)
+        s.insert(keys, keys * 10)
+        s.remove(keys[:50])
+        hit = np.array(s.contains(keys))
+        assert hit[50:].all() and not hit[:50].any()
+
+        print(f"[{mode:9s}] size={len(s):3d} psyncs={s.psyncs:4d} "
+              f"(updates=150 -> psync/update="
+              f"{s.psyncs / 150:.2f})")
+
+        # power failure: volatile index is lost, durable areas survive;
+        # recovery scans validity words and rebuilds the hash index.
+        s.crash_and_recover(jnp.asarray(np.random.rand(1024), jnp.float32))
+        hit = np.array(s.contains(keys))
+        assert hit[50:].all() and not hit[:50].any()
+        print(f"[{mode:9s}] recovered {len(s)} members after crash OK")
+
+    print("\nSOFT hits the Cohen et al. lower bound: 1 psync/update, "
+          "0 psync/read; log-free (the baseline we beat) pays ~2x.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Serving example: batched generation + the durable request registry
+(crash-safe completion tracking via the SOFT set).
+
+Run:  PYTHONPATH=src python examples/serve_kv.py
+"""
+from repro.launch import serve as S
+
+
+def main():
+    S.main(["--arch", "qwen3-32b-smoke", "--requests", "8",
+            "--prompt-len", "32", "--gen", "16", "--crash"])
+
+
+if __name__ == "__main__":
+    main()

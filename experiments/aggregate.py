@@ -1,0 +1,76 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table."""
+import glob
+import json
+import os
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir="experiments/dryrun"):
+    cells = {}
+    for f in glob.glob(os.path.join(out_dir, "*.json")):
+        r = json.load(open(f))
+        key = (r.get("arch"), r.get("shape"),
+               "2pod" if r.get("multi_pod") else "1pod")
+        cells[key] = r
+    return cells
+
+
+def table(cells, pod="1pod"):
+    rows = []
+    hdr = ("| arch | shape | fits (args+temp GiB/dev) | t_comp ms | t_mem ms "
+           "| t_coll ms | dominant | MODEL/HLO | roofline frac |")
+    rows.append(hdr)
+    rows.append("|" + "---|" * 9)
+    archs = sorted({k[0] for k in cells if k[0]})
+    for arch in archs:
+        for shape in ORDER:
+            r = cells.get((arch, shape, pod))
+            if r is None:
+                continue
+            if "skipped" in r:
+                rows.append(f"| {arch} | {shape} | — skipped: "
+                            f"{r['skipped'][:60]} | | | | | | |")
+                continue
+            if "error" in r:
+                rows.append(f"| {arch} | {shape} | ERROR {r['error'][:60]} "
+                            f"| | | | | | |")
+                continue
+            m = r["memory"]
+            gib = (m["argument_size_in_bytes"] + m["temp_size_in_bytes"]) / 2**30
+            rl = r.get("roofline")
+            if rl:
+                rows.append(
+                    f"| {arch} | {shape} | {gib:.1f} "
+                    f"| {rl['t_compute']*1e3:.1f} | {rl['t_memory']*1e3:.1f} "
+                    f"| {rl['t_collective']*1e3:.1f} | {rl['dominant']} "
+                    f"| {rl['useful_ratio']:.2f} "
+                    f"| {rl['roofline_fraction']:.3f} |")
+            else:
+                rows.append(f"| {arch} | {shape} | {gib:.1f} | | | | "
+                            f"(compile-only) | | |")
+    return "\n".join(rows)
+
+
+def multi_pod_summary(cells):
+    rows = ["| arch | shape | compile s | GiB/dev |", "|---|---|---|---|"]
+    for (arch, shape, pod), r in sorted(cells.items()):
+        if pod != "2pod" or "memory" not in r:
+            continue
+        m = r["memory"]
+        gib = (m["argument_size_in_bytes"] + m["temp_size_in_bytes"]) / 2**30
+        rows.append(f"| {arch} | {shape} | {r['compile_s']} | {gib:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    cells = load(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    done = len(cells)
+    errs = sum(1 for r in cells.values() if "error" in r)
+    skips = sum(1 for r in cells.values() if "skipped" in r)
+    print(f"cells: {done} (errors {errs}, skips {skips})\n")
+    print("## Single-pod roofline\n")
+    print(table(cells, "1pod"))
+    print("\n## Multi-pod (2x16x16) compile pass\n")
+    print(multi_pod_summary(cells))

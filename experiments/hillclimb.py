@@ -1,0 +1,68 @@
+"""§Perf hillclimb driver: run the three chosen cells through optimization
+variants, recording hypothesis -> change -> before/after per iteration.
+
+Chosen cells (from the baseline roofline table):
+  1. minicpm3-4b x train_4k   -- worst roofline fraction among train cells
+     (memory-dominant: MLA train path materializes per-head K/V from the
+     latent; 62-layer remat stacks)
+  2. qwen3-32b x decode_32k   -- most collective-bound (FSDP weight
+     all-gather per decoded token)
+  3. arctic-480b x train_4k   -- most representative of scale + the MoE
+     dispatch path; collective-dominant
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+
+from repro.launch.dryrun import run_cell
+
+VARIANTS = {
+    # cell: list of (variant_name, kwargs)
+    ("minicpm3-4b", "train_4k"): [
+        ("base", {}),
+        ("ga2", {"overrides": {"grad_accum": 2}}),
+        ("ga4", {"overrides": {"grad_accum": 4}}),
+        ("ga2_dots", {"overrides": {"grad_accum": 2, "remat": "dots"}}),
+    ],
+    ("qwen3-32b", "decode_32k"): [
+        ("base", {}),
+        ("serve_layout", {"opt": True}),     # TP-only params, no FSDP AG
+    ],
+    ("arctic-480b", "train_4k"): [
+        ("base", {}),
+        ("ga4", {"overrides": {"grad_accum": 4}}),
+        ("cf1", {"overrides": {"capacity_factor": 1.0}}),
+        ("ga4_cf1", {"overrides": {"grad_accum": 4, "capacity_factor": 1.0}}),
+    ],
+}
+
+
+def main():
+    out = sys.argv[1] if len(sys.argv) > 1 else "experiments/hillclimb"
+    os.makedirs(out, exist_ok=True)
+    only = sys.argv[2] if len(sys.argv) > 2 else None
+    for (arch, shape), variants in VARIANTS.items():
+        if only and only not in arch:
+            continue
+        for name, kw in variants:
+            tag = f"{arch}_{shape}_{name}"
+            path = os.path.join(out, tag + ".json")
+            if os.path.exists(path):
+                print(f"[cached] {tag}")
+                continue
+            print(f"=== {tag} ===")
+            try:
+                rec = run_cell(arch, shape, **kw)
+            except Exception as e:
+                rec = {"error": repr(e)[:500]}
+                print("FAIL", rec["error"])
+            rec["variant"] = name
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

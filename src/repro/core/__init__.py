@@ -1,0 +1,8 @@
+"""Core contribution: durable lock-free sets (link-free / SOFT) in JAX."""
+from repro.core.nvm import (FREE, INVALID, PAYLOAD, VALID, DELETED, EMPTY,
+                            TOMB, hash32, crash_persisted_stage)
+from repro.core.durable_set import (SetState, make_state, insert_batch,
+                                    remove_batch, contains_batch, crash,
+                                    recover, crash_and_recover, DurableSet,
+                                    MODES)
+from repro.core.oracle import OracleSet

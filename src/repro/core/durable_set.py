@@ -1,0 +1,405 @@
+"""Batched durable lock-free sets in JAX: link-free, SOFT and the log-free baseline.
+
+Concurrency adaptation (see DESIGN.md §2): a batch of B lanes plays the role
+of B racing threads.  Conflicts inside a batch are resolved by lane priority
+(lowest lane index wins the "CAS"); losing lanes observe the winner exactly
+like helped threads in the paper.  All operations are pure functions
+``state -> (state, result)`` and fully jittable with static capacity.
+
+The three algorithms share the node-pool + volatile-index machinery and
+differ in *when they psync* (the paper's entire performance story):
+
+  soft      1 psync per successful update (theoretical lower bound,
+            Cohen et al. 2018), 0 per read, 0 for helped/failed ops.
+  linkfree  1 psync per successful update; failed inserts / contains may
+            psync once more to make a racing insert durable before reporting
+            (FLUSH_INSERT of Listing 3/4); duplicate-lane contention causes
+            extra helper flushes -- the paper's observed high-contention cost.
+  logfree   models David et al. [2018]: every update additionally persists
+            the link write (2 psyncs per update: node + pointer), the
+            baseline the paper beats by up to 3.3x.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.nvm import (FREE, INVALID, PAYLOAD, VALID, DELETED, EMPTY,
+                            TOMB, hash32, crash_persisted_stage)
+
+MODES = ("linkfree", "soft", "logfree")
+
+
+class SetState(NamedTuple):
+    """Durable areas + volatile index + psync accounting."""
+    # --- durable area (node pool); keys/values persist once stage >= PAYLOAD
+    keys: jax.Array      # i32[N]
+    values: jax.Array    # i32[N]
+    cur: jax.Array       # i32[N] volatile lifecycle stage
+    flushed: jax.Array   # i32[N] stage covered by the last explicit psync
+    # --- volatile index (never persisted -- the paper's core idea)
+    table: jax.Array     # i32[T] node id, EMPTY or TOMB; linear probing
+    # --- accounting
+    n_psync: jax.Array   # i64[] explicit flush+fence count
+    n_ops: jax.Array     # i64[] completed operations
+    size: jax.Array      # i32[] live member count
+    overflow: jax.Array  # bool[] capacity / probe-length failure latch
+
+
+def make_state(capacity: int, table_factor: int = 4) -> SetState:
+    n = int(capacity)
+    t = 1 << max(3, (n * table_factor - 1).bit_length())
+    return SetState(
+        keys=jnp.zeros((n,), jnp.int32),
+        values=jnp.zeros((n,), jnp.int32),
+        cur=jnp.zeros((n,), jnp.int32),
+        flushed=jnp.zeros((n,), jnp.int32),
+        table=jnp.full((t,), EMPTY, jnp.int32),
+        n_psync=jnp.zeros((), jnp.int32),
+        n_ops=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+        overflow=jnp.zeros((), jnp.bool_),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Volatile index: vectorized linear-probe lookup, sequential-scan variant,
+# fori_loop writer (insertion order == linearization order).
+# ---------------------------------------------------------------------------
+
+MAX_PROBE = 128
+
+
+def _lookup_probe(state: SetState, keys: jax.Array) -> jax.Array:
+    """Vectorized linear-probe lookup -> node id or EMPTY per lane."""
+    t = state.table.shape[0]
+    h = (hash32(keys) & jnp.uint32(t - 1)).astype(jnp.int32)
+    b = keys.shape[0]
+
+    def body(d, carry):
+        found, done = carry
+        pos = (h + d) & (t - 1)
+        ids = state.table[pos]
+        is_empty = ids == EMPTY
+        live = ids >= 0
+        k = state.keys[jnp.clip(ids, 0, state.keys.shape[0] - 1)]
+        match = live & (k == keys)
+        found = jnp.where(match & ~done, ids, found)
+        done = done | match | is_empty
+        return found, done
+
+    found, _ = lax.fori_loop(0, MAX_PROBE, body,
+                             (jnp.full((b,), EMPTY, jnp.int32),
+                              jnp.zeros((b,), jnp.bool_)))
+    return found
+
+
+def _lookup_scan(state: SetState, keys: jax.Array) -> jax.Array:
+    """O(N)-traversal lookup: models the paper's *list* experiments, where
+    operation cost is dominated by walking the linked structure."""
+    live = state.cur == VALID
+    eq = live[None, :] & (keys[:, None] == state.keys[None, :])
+    any_hit = eq.any(axis=1)
+    idx = jnp.argmax(eq, axis=1).astype(jnp.int32)
+    return jnp.where(any_hit, idx, EMPTY)
+
+
+def _lookup(state: SetState, keys: jax.Array, index: str) -> jax.Array:
+    return _lookup_scan(state, keys) if index == "scan" else _lookup_probe(state, keys)
+
+
+def _table_write(table: jax.Array, keys: jax.Array, ids: jax.Array,
+                 do: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Insert (key -> id) pairs for lanes with do[i]; first EMPTY/TOMB slot.
+
+    The fori_loop over lanes *is* the linearization order: lane i's write
+    happens before lane j's for i < j, the deterministic stand-in for the
+    winning CAS order.
+    """
+    t = table.shape[0]
+    h = (hash32(keys) & jnp.uint32(t - 1)).astype(jnp.int32)
+    b = keys.shape[0]
+
+    def lane(i, carry):
+        table, ovf = carry
+
+        def probe(d, c):
+            pos_found, done = c
+            pos = (h[i] + d) & (t - 1)
+            slot = table[pos]
+            free = slot < 0
+            pos_found = jnp.where(free & ~done, pos, pos_found)
+            done = done | free
+            return pos_found, done
+
+        pos, done = lax.fori_loop(0, MAX_PROBE, probe,
+                                  (jnp.int32(0), jnp.bool_(False)))
+        newt = table.at[pos].set(jnp.where(do[i] & done, ids[i], table[pos]))
+        return newt, ovf | (do[i] & ~done)
+
+    return lax.fori_loop(0, b, lane, (table, jnp.bool_(False)))
+
+
+def _table_delete(table: jax.Array, keys: jax.Array, ids: jax.Array,
+                  do: jax.Array) -> jax.Array:
+    """Tombstone the slot holding id for lanes with do[i] (the trim)."""
+    t = table.shape[0]
+    h = (hash32(keys) & jnp.uint32(t - 1)).astype(jnp.int32)
+    b = keys.shape[0]
+
+    def lane(i, table):
+        def probe(d, c):
+            pos_found, done = c
+            pos = (h[i] + d) & (t - 1)
+            hit = table[pos] == ids[i]
+            stop = table[pos] == EMPTY
+            pos_found = jnp.where(hit & ~done, pos, pos_found)
+            done = done | hit | stop
+            return pos_found, done
+
+        pos, _ = lax.fori_loop(0, MAX_PROBE, probe,
+                               (jnp.int32(-1), jnp.bool_(False)))
+        ok = do[i] & (pos >= 0)
+        return table.at[jnp.clip(pos, 0)].set(
+            jnp.where(ok, TOMB, table[jnp.clip(pos, 0)]))
+
+    return lax.fori_loop(0, b, lane, table)
+
+
+def _alloc(state: SetState, need: jax.Array, count: jax.Array):
+    """Pick ``count`` free node slots; lane i gets the cumsum(need)-th one.
+
+    Free slots are nodes at FREE or flushed-DELETED stage (the paper's ssmem
+    free-list; a DELETED node may be reused only after its deletion psync,
+    which all three algorithms perform before returning).
+    """
+    free = (state.cur == FREE) | ((state.cur == DELETED) & (state.flushed == DELETED))
+    order = jnp.cumsum(free.astype(jnp.int32)) - 1   # rank among free slots
+    b = need.shape[0]
+    sel = free & (order < count)
+    slot_ids = jnp.where(sel, size=b, fill_value=-1)[0].astype(jnp.int32)
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1    # lane -> slot rank
+    lane_slot = jnp.where(need, slot_ids[jnp.clip(rank, 0, b - 1)], -1)
+    ovf = (jnp.sum(free.astype(jnp.int32)) < count)
+    return lane_slot, ovf
+
+
+def _dedup_first(keys: jax.Array) -> jax.Array:
+    """True for the first lane carrying each distinct key (lane-priority CAS)."""
+    b = keys.shape[0]
+    same = keys[:, None] == keys[None, :]
+    earlier = jnp.tril(jnp.ones((b, b), jnp.bool_), k=-1)
+    return ~(same & earlier).any(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Operations
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("mode", "index"))
+def insert_batch(state: SetState, keys: jax.Array, values: jax.Array,
+                 mode: str = "soft", index: str = "probe"
+                 ) -> Tuple[SetState, jax.Array]:
+    """Batched insert; returns success per lane (False == key already present)."""
+    assert mode in MODES
+    b = keys.shape[0]
+    existing = _lookup(state, keys, index)
+    found = existing >= 0
+    first = _dedup_first(keys)
+    win = first & ~found                       # lanes that insert a new node
+    lose_dup = ~first & ~found                 # lanes that lose the in-batch race
+
+    count = jnp.sum(win.astype(jnp.int32))
+    slots, ovf = _alloc(state, win, count)
+    n = state.keys.shape[0]
+    win = win & (slots >= 0)                        # drop lanes on overflow
+    count = jnp.sum(win.astype(jnp.int32))
+    sidx = jnp.where(win, slots, n)                 # OOB scatter => dropped
+
+    keys_a = state.keys.at[sidx].set(keys, mode="drop")
+    vals_a = state.values.at[sidx].set(values, mode="drop")
+    # flipV1 -> payload -> makeValid, then psync: cur=VALID, flushed=VALID.
+    cur = state.cur.at[sidx].set(VALID, mode="drop")
+    flushed = state.flushed.at[sidx].set(VALID, mode="drop")
+
+    table, tovf = _table_write(state.table, keys, slots, win)
+
+    # --- psync accounting --------------------------------------------------
+    new_psync = count                                        # FLUSH_INSERT / PNode.create
+    if mode == "logfree":
+        new_psync = new_psync * 2                            # + pointer persist
+    if mode == "linkfree":
+        # Failed insert must make the racing insert durable before returning
+        # false (Listing 4 lines 6-8).  The insert-flush flag elides the psync
+        # when already flushed; only pre-existing *unflushed* nodes pay.
+        eidx = jnp.clip(existing, 0, state.keys.shape[0] - 1)
+        helper = found & (state.flushed[eidx] < VALID) & (state.cur[eidx] == VALID)
+        flushed = flushed.at[jnp.where(helper, eidx, 0)].max(
+            jnp.where(helper, VALID, 0))
+        # Contention model: duplicate lanes re-flush the winner (flag race).
+        new_psync = new_psync + jnp.sum(helper.astype(jnp.int32)) \
+            + jnp.sum(lose_dup.astype(jnp.int32))
+    if mode == "logfree":
+        new_psync = new_psync + 2 * jnp.sum(lose_dup.astype(jnp.int32))
+
+    ok = win
+    return SetState(
+        keys=keys_a, values=vals_a, cur=cur, flushed=flushed, table=table,
+        n_psync=state.n_psync + new_psync.astype(jnp.int32),
+        n_ops=state.n_ops + b,
+        size=state.size + count,
+        overflow=state.overflow | ovf | tovf,
+    ), ok
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "index"))
+def remove_batch(state: SetState, keys: jax.Array,
+                 mode: str = "soft", index: str = "probe"
+                 ) -> Tuple[SetState, jax.Array]:
+    """Batched remove; success == key was present and this lane won the race."""
+    assert mode in MODES
+    b = keys.shape[0]
+    existing = _lookup(state, keys, index)
+    found = existing >= 0
+    first = _dedup_first(keys)
+    win = first & found
+    lose_dup = ~first & found
+
+    eidx = jnp.clip(existing, 0, state.keys.shape[0] - 1)
+    # mark (INTEND_TO_DELETE -> destroy psync -> DELETED); flushed follows
+    # because every algorithm persists the delete before returning.
+    mark = jnp.zeros_like(state.cur).at[jnp.where(win, eidx, 0)].max(
+        win.astype(state.cur.dtype)).astype(jnp.bool_)
+    cur = jnp.where(mark, DELETED, state.cur)
+    flushed = jnp.where(mark, DELETED, state.flushed)
+
+    table = _table_delete(state.table, keys, existing, win)
+
+    count = jnp.sum(win.astype(jnp.int32))
+    new_psync = count                                        # FLUSH_DELETE / PNode.destroy
+    if mode == "logfree":
+        new_psync = new_psync * 2 + 2 * jnp.sum(lose_dup.astype(jnp.int32))
+    if mode == "linkfree":
+        new_psync = new_psync + jnp.sum(lose_dup.astype(jnp.int32))
+
+    return SetState(
+        keys=state.keys, values=state.values, cur=cur, flushed=flushed,
+        table=table,
+        n_psync=state.n_psync + new_psync.astype(jnp.int32),
+        n_ops=state.n_ops + b,
+        size=state.size - count,
+        overflow=state.overflow,
+    ), win
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "index"))
+def contains_batch(state: SetState, keys: jax.Array,
+                   mode: str = "soft", index: str = "probe"
+                   ) -> Tuple[SetState, jax.Array]:
+    """Batched contains.  SOFT: zero psync (wait-free read, the bound).
+    Link-free: must ensure a positive answer is durable (FLUSH_INSERT with
+    flag elision, Listing 3 line 12).  Log-free: link-and-persist read flush
+    when the link is not yet persisted (modeled like link-free)."""
+    assert mode in MODES
+    existing = _lookup(state, keys, index)
+    found = existing >= 0
+    eidx = jnp.clip(existing, 0, state.keys.shape[0] - 1)
+    present = found & (state.cur[eidx] == VALID)
+
+    new_psync = jnp.int32(0)
+    flushed = state.flushed
+    if mode in ("linkfree", "logfree"):
+        need = present & (state.flushed[eidx] < VALID)
+        flushed = flushed.at[jnp.where(need, eidx, 0)].max(
+            jnp.where(need, VALID, 0))
+        new_psync = jnp.sum(need.astype(jnp.int32))
+
+    return state._replace(
+        flushed=flushed,
+        n_psync=state.n_psync + new_psync.astype(jnp.int32),
+        n_ops=state.n_ops + keys.shape[0],
+    ), present
+
+
+# ---------------------------------------------------------------------------
+# Crash + recovery
+# ---------------------------------------------------------------------------
+
+def crash(state: SetState, u: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Power failure: volatile state (table!) is lost.  Returns only what NVM
+    holds: per-node persisted stage plus key/value payloads.  ``u`` in [0,1)
+    per node drives the eviction adversary."""
+    persisted = crash_persisted_stage(state.cur, state.flushed, u)
+    return persisted, state.keys, state.values
+
+
+@functools.partial(jax.jit, static_argnames=("table_factor",))
+def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array,
+            table_factor: int = 4) -> SetState:
+    """Rebuild a fresh set from the durable areas (Sections 3.5 / 4.6):
+    persisted == VALID -> member; everything else -> free list.  No psync is
+    ever issued: payloads are already durable."""
+    n = keys.shape[0]
+    member = persisted == VALID
+    state = make_state(n, table_factor)
+    cur = jnp.where(member, VALID, FREE)
+    state = state._replace(
+        keys=jnp.where(member, keys, 0),
+        values=jnp.where(member, values, 0),
+        cur=cur, flushed=cur,
+        size=jnp.sum(member.astype(jnp.int32)),
+    )
+    ids = jnp.arange(n, dtype=jnp.int32)
+    table, ovf = _table_write(state.table, state.keys, ids, member)
+    return state._replace(table=table, overflow=state.overflow | ovf)
+
+
+def crash_and_recover(state: SetState, u: jax.Array,
+                      table_factor: int = 4) -> SetState:
+    return recover(*crash(state, u), table_factor=table_factor)
+
+
+# ---------------------------------------------------------------------------
+# Convenience OO wrapper
+# ---------------------------------------------------------------------------
+
+class DurableSet:
+    """Object API over the functional core (single-controller usage)."""
+
+    def __init__(self, capacity: int, mode: str = "soft", index: str = "probe"):
+        assert mode in MODES
+        self.mode, self.index = mode, index
+        self.state = make_state(capacity)
+
+    def insert(self, keys, values):
+        self.state, ok = insert_batch(self.state, jnp.asarray(keys, jnp.int32),
+                                      jnp.asarray(values, jnp.int32),
+                                      mode=self.mode, index=self.index)
+        return ok
+
+    def remove(self, keys):
+        self.state, ok = remove_batch(self.state, jnp.asarray(keys, jnp.int32),
+                                      mode=self.mode, index=self.index)
+        return ok
+
+    def contains(self, keys):
+        self.state, ok = contains_batch(self.state, jnp.asarray(keys, jnp.int32),
+                                        mode=self.mode, index=self.index)
+        return ok
+
+    def crash_and_recover(self, u=None):
+        if u is None:
+            u = jnp.zeros_like(self.state.cur, jnp.float32)
+        self.state = crash_and_recover(self.state, u)
+        return self
+
+    @property
+    def psyncs(self):
+        return int(self.state.n_psync)
+
+    def __len__(self):
+        return int(self.state.size)

@@ -1,0 +1,63 @@
+"""Stage-machine NVM simulation shared by the durable-set algorithms.
+
+The paper's correctness argument (Claims B.4 / C.13) reduces every node's
+durable lifecycle to a monotonic state machine whose writes all land in one
+cache line, so TSO same-line ordering guarantees that a crash exposes a
+*prefix* of the machine.  We make that machine explicit:
+
+    FREE(0) -> INVALID(1) -> PAYLOAD(2) -> VALID(3) -> DELETED(4)
+
+  FREE     node unallocated (SOFT: "valid and removed" == reusable)
+  INVALID  first validity bit flipped (link-free flipV1 / SOFT validStart)
+  PAYLOAD  key/value written while still invalid
+  VALID    second validity bit equated (makeValid / validEnd) -- set member
+  DELETED  mark / deleted flag set -- not a member, reclaimable
+
+Per node we track ``cur`` (volatile stage) and ``flushed`` (stage covered by
+the last explicit psync).  A crash may expose, independently per node, any
+``persisted in [flushed, cur]`` -- the same adversary the paper's proofs
+quantify over (explicit flush lower bound; arbitrary cache eviction upper
+bound).  Recovery classifies ``persisted == VALID`` as a set member and
+everything else as reclaimable, exactly Sections 3.5 / 4.6.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Lifecycle stages (see module docstring).
+FREE, INVALID, PAYLOAD, VALID, DELETED = 0, 1, 2, 3, 4
+
+# Volatile probe-table sentinels.
+EMPTY = -1
+TOMB = -2
+
+
+def hash32(x: jax.Array) -> jax.Array:
+    """Deterministic avalanching hash of int32 keys (lowered from splitmix)."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def crash_persisted_stage(cur: jax.Array, flushed: jax.Array,
+                          u: jax.Array) -> jax.Array:
+    """Adversarial crash: per-node persisted stage in [flushed, cur].
+
+    ``u`` in [0, 1) drives the adversary (hypothesis or RNG supplies it).
+    The prefix property of same-cache-line writes means nothing *earlier*
+    than ``flushed`` and nothing *later* than ``cur`` can be exposed.
+    """
+    span = (cur - flushed + 1).astype(jnp.float32)
+    off = jnp.floor(u * span).astype(cur.dtype)
+    return jnp.clip(flushed + off, flushed, cur)
+
+
+def np_hash32(x: np.ndarray) -> np.ndarray:
+    x = np.asarray(x, dtype=np.uint32)
+    x = (x ^ (x >> 16)) * np.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * np.uint32(0x846CA68B)
+    return x ^ (x >> 16)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for causal (optionally windowed) GQA flash prefill."""
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      window: int = 0) -> jax.Array:
+    """q f[B,S,H,D]; k,v f[B,S,KV,D]; window 0 == full causal.
+    Returns f[B,S,H,D] (q dtype)."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = q.astype(jnp.float32).reshape(b, s, kv, g, d)
+    logits = jnp.einsum("bqngd,bknd->bngqk", qf, k.astype(jnp.float32))
+    logits = logits / math.sqrt(d)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = kp <= qp
+    if window:
+        mask &= kp > qp - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngqk,bknd->bqngd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

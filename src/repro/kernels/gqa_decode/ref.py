@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for GQA decode attention."""
+import jax
+import jax.numpy as jnp
+
+
+def gqa_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                   length: jax.Array) -> jax.Array:
+    """Single-token decode attention with a GQA KV cache.
+
+    q f[B, H, D]; k,v f[B, S, KV, D]; length i32[B] (valid cache prefix).
+    H % KV == 0; returns f[B, H, D] (same dtype as q).
+    """
+    b, h, d = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qf = q.astype(jnp.float32).reshape(b, kv, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bngd,bsnd->bngs", qf, kf) / jnp.sqrt(d)
+    mask = jnp.arange(s)[None, :] < length[:, None]          # (B, S)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bngs,bsnd->bngd", p, vf)
+    return out.reshape(b, h, d).astype(q.dtype)

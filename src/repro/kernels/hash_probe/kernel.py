@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: bucketized hash-table probe via MXU one-hot gather.
+
+TPU adaptation of the paper's hash-bucket traversal (DESIGN.md §2): pointer
+chasing does not map to a systolic machine, so the volatile index becomes a
+set-associative table (NB buckets x W ways) and the random bucket *gather*
+is performed on the MXU as a one-hot matmul -- (Bq, NBt) @ (NBt, W) -- which
+is exact for values < 2^24 in f32.  int32 keys are split into two u16
+halves so equality survives the f32 round trip.
+
+Tiling: grid (B / BQ, NB / NBT).  Each program holds a (BQ, NBT) one-hot in
+VMEM, gathers the key-half and id planes for its bucket tile, and folds the
+match into the output with a running max (ids are unique, empty == -1, so
+max over tiles is the join).  VMEM per program:
+  onehot BQ*NBT*4 + 3 planes NBT*W*4 + out BQ*4  ~= 128*512*4*2 = 512 KiB
+with the default BQ=128, NBT=512, W=8 -- comfortably under 16 MiB and MXU
+dims (128 x 512 @ 512 x 8) are lane-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_kernel(qb_ref, qhi_ref, qlo_ref, khi_ref, klo_ref, ids_ref,
+                  out_ref, *, nbt: int):
+    j = pl.program_id(1)
+    first = j == 0
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, -1)
+
+    qb = qb_ref[...]                                   # (BQ,) bucket index
+    base = j * nbt
+    local = qb - base                                  # bucket within tile
+    in_tile = (local >= 0) & (local < nbt)
+    onehot = jax.nn.one_hot(jnp.where(in_tile, local, 0), nbt,
+                            dtype=jnp.float32)         # (BQ, NBT)
+    onehot = onehot * in_tile[:, None].astype(jnp.float32)
+
+    gk_hi = jax.lax.dot(onehot, khi_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)   # (BQ, W)
+    gk_lo = jax.lax.dot(onehot, klo_ref[...].astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    # ids offset by +1 so that "empty" (0 after offset) survives the one-hot
+    # matmul's zero fill; 24-bit id budget checked by the wrapper.
+    g_ids = jax.lax.dot(onehot, (ids_ref[...] + 1).astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+
+    match = (gk_hi == qhi_ref[...][:, None].astype(jnp.float32)) & \
+            (gk_lo == qlo_ref[...][:, None].astype(jnp.float32)) & \
+            (g_ids > 0)
+    found = jnp.where(match, g_ids.astype(jnp.int32) - 1, -1)
+    found = jnp.max(found, axis=1)                      # (BQ,)
+    out_ref[...] = jnp.maximum(out_ref[...], found)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "nbt", "interpret"))
+def probe_pallas(bucket_keys: jax.Array, bucket_ids: jax.Array,
+                 q_bucket: jax.Array, q_keys: jax.Array,
+                 *, bq: int = 128, nbt: int = 512,
+                 interpret: bool = True) -> jax.Array:
+    """Bucketized lookup.  Shapes: bucket_keys/bucket_ids i32[NB, W] with NB
+    divisible by nbt; q_bucket/q_keys i32[B] with B divisible by bq."""
+    nb, w = bucket_keys.shape
+    b = q_keys.shape[0]
+    assert nb % nbt == 0 and b % bq == 0, (nb, nbt, b, bq)
+    assert int(nb) * 1 < (1 << 24), "bucket count exceeds f32-exact id budget"
+
+    khi = (bucket_keys.view(jnp.uint32) >> 16).astype(jnp.int32)
+    klo = (bucket_keys.view(jnp.uint32) & jnp.uint32(0xFFFF)).astype(jnp.int32)
+    qhi = (q_keys.view(jnp.uint32) >> 16).astype(jnp.int32)
+    qlo = (q_keys.view(jnp.uint32) & jnp.uint32(0xFFFF)).astype(jnp.int32)
+
+    grid = (b // bq, nb // nbt)
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, nbt=nbt),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq,), lambda i, j: (i,)),        # q_bucket
+            pl.BlockSpec((bq,), lambda i, j: (i,)),        # q hi
+            pl.BlockSpec((bq,), lambda i, j: (i,)),        # q lo
+            pl.BlockSpec((nbt, w), lambda i, j: (j, 0)),   # key hi plane
+            pl.BlockSpec((nbt, w), lambda i, j: (j, 0)),   # key lo plane
+            pl.BlockSpec((nbt, w), lambda i, j: (j, 0)),   # id plane
+        ],
+        out_specs=pl.BlockSpec((bq,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=interpret,
+    )(q_bucket, qhi, qlo, khi, klo, bucket_ids)

@@ -1,0 +1,55 @@
+"""Jit'd wrapper tying the probe kernel to the durable-set state."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nvm import hash32, VALID
+from repro.kernels.hash_probe.kernel import probe_pallas
+from repro.kernels.hash_probe.ref import probe_ref
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "w"))
+def build_buckets(keys: jax.Array, cur: jax.Array, nb: int = 1024, w: int = 8):
+    """Pack live nodes of a durable-set pool into a (NB, W) bucket table.
+
+    Deterministic way assignment: rank of each node among same-bucket live
+    nodes (computed with a sort), overflowing entries dropped into the dense
+    stash handled by the wrapper (rare under load factor <= 0.5)."""
+    n = keys.shape[0]
+    live = cur == VALID
+    bucket = (hash32(keys) % jnp.uint32(nb)).astype(jnp.int32)
+    bucket = jnp.where(live, bucket, nb)          # dead nodes -> overflow bin
+    order = jnp.argsort(bucket)                   # stable: groups same bucket
+    sorted_b = bucket[order]
+    # rank within bucket group
+    idx = jnp.arange(n, dtype=jnp.int32)
+    first_of_group = jnp.concatenate([jnp.array([0], jnp.int32),
+                                      jnp.cumsum((sorted_b[1:] != sorted_b[:-1])
+                                                 .astype(jnp.int32))])
+    group_start = jnp.full((nb + 1,), n, jnp.int32).at[sorted_b].min(
+        idx, mode="drop")
+    rank = idx - group_start[jnp.clip(sorted_b, 0, nb)]
+    ok = (sorted_b < nb) & (rank < w)
+    flat = jnp.where(ok, sorted_b * w + rank, nb * w)
+    bkeys = jnp.zeros((nb * w,), jnp.int32).at[flat].set(
+        keys[order], mode="drop").reshape(nb, w)
+    bids = jnp.full((nb * w,), -1, jnp.int32).at[flat].set(
+        order.astype(jnp.int32), mode="drop").reshape(nb, w)
+    overflow = jnp.sum((sorted_b < nb) & (rank >= w))
+    return bkeys, bids, overflow
+
+
+def lookup(bucket_keys, bucket_ids, q_keys, *, use_pallas=True,
+           interpret=True):
+    nb = bucket_keys.shape[0]
+    qb = (hash32(q_keys) % jnp.uint32(nb)).astype(jnp.int32)
+    if use_pallas:
+        b = q_keys.shape[0]
+        bq = 128 if b % 128 == 0 else (8 if b % 8 == 0 else 1)
+        nbt = min(512, nb)
+        return probe_pallas(bucket_keys, bucket_ids, qb, q_keys,
+                            bq=bq, nbt=nbt, interpret=interpret)
+    return probe_ref(bucket_keys, bucket_ids, qb, q_keys)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the bucketized hash-probe lookup."""
+import jax
+import jax.numpy as jnp
+
+
+def probe_ref(bucket_keys: jax.Array, bucket_ids: jax.Array,
+              q_bucket: jax.Array, q_keys: jax.Array) -> jax.Array:
+    """Direct-gather reference.
+
+    bucket_keys i32[NB, W], bucket_ids i32[NB, W] (-1 == empty way),
+    q_bucket i32[B] (bucket index per query), q_keys i32[B].
+    Returns node id per query or -1.
+    """
+    rows_k = bucket_keys[q_bucket]          # (B, W)
+    rows_i = bucket_ids[q_bucket]           # (B, W)
+    match = (rows_i >= 0) & (rows_k == q_keys[:, None])
+    found = jnp.where(match, rows_i, -1)
+    return jnp.max(found, axis=1)

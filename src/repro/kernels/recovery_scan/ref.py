@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the recovery validity scan."""
+import jax
+import jax.numpy as jnp
+
+N_STAGES = 5
+
+
+def scan_ref(persisted: jax.Array):
+    """persisted i32[N] -> (member_mask bool[N], stage_histogram i32[5]).
+
+    member == persisted stage VALID(3): the recovery classification rule of
+    Sections 3.5 / 4.6 (valid & unmarked / validStart==validEnd!=deleted)."""
+    member = persisted == 3
+    hist = jnp.zeros((N_STAGES,), jnp.int32).at[jnp.clip(persisted, 0, 4)].add(1)
+    return member, hist

@@ -1,0 +1,182 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, print memory/cost analyses and derive the
+three-term roofline (EXPERIMENTS.md reads the JSON this writes).
+
+The XLA_FLAGS line above MUST run before any jax import: jax locks the
+device count at first init.  Do not set that flag anywhere else -- smoke
+tests and benchmarks see the real single CPU device.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/]
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs.base import (SHAPES, ModelConfig, ShapeConfig,
+                                cell_applicable, get_config)
+from repro.configs.all import ASSIGNED
+from repro.launch.mesh import make_production_mesh
+from repro.launch.meshctx import mesh_context
+from repro.launch import roofline as RL
+from repro.launch.specs import cell_abstract_and_shardings
+from repro.models.params import active_param_count
+
+
+def lower_cell(arch: str, shape_name: str, mesh,
+               layer_override: Optional[int] = None, opt: bool = False,
+               overrides: Optional[Dict[str, Any]] = None):
+    """Lower one cell; returns jax.stages.Lowered."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if layer_override is not None:
+        if cfg.is_encdec:
+            cfg = cfg.with_layers(layer_override, layer_override)
+        else:
+            cfg = cfg.with_layers(layer_override)
+    shape = SHAPES[shape_name]
+    step, args, in_sh, out_sh, ctx = cell_abstract_and_shardings(
+        cfg, shape, mesh, opt=opt)
+    # donate the mutated state (train state / KV caches): realistic serving
+    # and training both alias these buffers in place
+    donate = {"train": (0,), "prefill": (2,), "decode": (1,)}[shape.kind]
+    with mesh_context(mesh):
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        return jitted.lower(*args)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             do_roofline: bool = True, verbose: bool = True,
+             opt: bool = False,
+             overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.devices.shape)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "multi_pod": multi_pod, "chips": chips,
+                           "opt": opt, "overrides": overrides or {}}
+
+    t0 = time.time()
+    lowered = lower_cell(arch, shape_name, mesh, opt=opt,
+                         overrides=overrides)
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    ma = compiled.memory_analysis()
+    mem = {k: int(getattr(ma, k, 0)) for k in
+           ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")}
+    mem["total_per_device"] = (mem["argument_size_in_bytes"]
+                               + mem["temp_size_in_bytes"])
+    rec["memory"] = mem
+    if verbose:
+        print(f"[{arch} x {shape_name} x {'2pod' if multi_pod else '1pod'}] "
+              f"compiled in {rec['compile_s']}s; "
+              f"args={mem['argument_size_in_bytes']/2**30:.2f}GiB "
+              f"temp={mem['temp_size_in_bytes']/2**30:.2f}GiB per device")
+        print(" ", ma)
+
+    if do_roofline:
+        # L-decomposition: 1 and 2 periods per stack (scan bodies are
+        # counted once by cost_analysis -- see roofline.py)
+        p = len(cfg.pattern)
+        l1 = lower_cell(arch, shape_name, mesh, layer_override=p, opt=opt,
+                        overrides=overrides)
+        c1l = l1.compile()
+        c1 = RL.cost_of(c1l)
+        b1 = RL.collective_bytes(c1l.as_text())   # post-partitioning HLO
+        l2 = lower_cell(arch, shape_name, mesh, layer_override=2 * p,
+                        opt=opt, overrides=overrides)
+        c2l = l2.compile()
+        c2 = RL.cost_of(c2l)
+        b2 = RL.collective_bytes(c2l.as_text())
+        periods = cfg.n_layers / p
+        flops = c1["flops"] + (periods - 1) * max(c2["flops"] - c1["flops"], 0)
+        bytes_ = c1["bytes"] + (periods - 1) * max(c2["bytes"] - c1["bytes"], 0)
+        coll = {k: b1[k] + (periods - 1) * max(b2[k] - b1[k], 0)
+                for k in b1}
+        flops += RL.analytic_corrections(cfg, shape) / chips
+        n_active = active_param_count(cfg)
+        terms = RL.RooflineTerms(
+            flops=flops * chips,          # cost_analysis is per-device
+            bytes=bytes_ * chips,
+            coll_bytes=sum(coll.values()) * chips,
+            coll_breakdown={k: int(v * chips) for k, v in coll.items()},
+            chips=chips,
+            model_flops=RL.model_flops(cfg, shape, n_active))
+        rec["roofline"] = terms.to_dict()
+        if verbose:
+            r = rec["roofline"]
+            print(f"  roofline: compute={r['t_compute']*1e3:.2f}ms "
+                  f"memory={r['t_memory']*1e3:.2f}ms "
+                  f"collective={r['t_collective']*1e3:.2f}ms "
+                  f"dominant={r['dominant']} "
+                  f"useful={r['useful_ratio']:.2f} "
+                  f"frac={r['roofline_fraction']:.3f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="optimized (beyond-baseline) layouts for §Perf")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = ASSIGNED if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'2pod' if mp else '1pod'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip cached] {tag}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, multi_pod=mp, opt=args.opt,
+                                   do_roofline=not args.no_roofline and not mp)
+                except Exception as e:
+                    failures += 1
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[FAIL] {tag}: {rec['error']}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

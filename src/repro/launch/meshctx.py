@@ -1,0 +1,30 @@
+"""Process-global current-mesh registry (jax 0.8 has no ambient use_mesh)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+_MESH: Optional[jax.sharding.Mesh] = None
+
+
+def set_mesh(mesh: Optional[jax.sharding.Mesh]):
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[jax.sharding.Mesh]:
+    return _MESH
+
+
+class mesh_context:
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.prev = get_mesh()
+        set_mesh(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *a):
+        set_mesh(self.prev)

@@ -1,0 +1,176 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis(); collective bytes are
+parsed from the HLO text (operand sizes of all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute), since cost_analysis does
+not expose them.
+
+Two structural corrections (both documented in EXPERIMENTS.md):
+
+1. scan bodies are counted ONCE by cost_analysis.  Layer stacks therefore
+   get the L-decomposition: lower the model at 1 and 2 periods per stack;
+   per-period cost = c2 - c1; total = c1 + (periods - 1) * (c2 - c1).
+2. time-serial recurrences (sLSTM's hidden-to-gate matmul, mLSTM's
+   inter-chunk state scan) still undercount by their trip count; an
+   analytic correction term is added (exact formulas below).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # bytes/s
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum RESULT bytes per collective kind over the (per-device) module.
+
+    The post-partitioning HLO names operands without inline shapes, so the
+    result shape (left of '=') is the measurable proxy; for ring
+    implementations the wire traffic per device is within ~2x of this
+    (all-gather receives the result, all-reduce moves ~2x the operand)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        for kind in _COLLECTIVES:
+            pos = s.find(f" {kind}(")
+            if pos < 0:
+                pos = s.find(f" {kind}-start(")
+            if pos < 0:
+                continue
+            lhs = s[s.index("=") + 1:pos]
+            for m in _SHAPE_RE.finditer(lhs + " "):
+                out[kind] += _shape_bytes(m.group(1), m.group(2))
+            break
+    return out
+
+
+def cost_of(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    bytes: float
+    coll_bytes: float
+    coll_breakdown: Dict[str, int]
+    chips: int
+    model_flops: float
+
+    @property
+    def t_compute(self):
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self):
+        return self.bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes / (self.chips * LINK_BW)
+
+    @property
+    def dominant(self):
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_ratio(self):
+        return self.model_flops / max(self.flops, 1.0)
+
+    @property
+    def roofline_fraction(self):
+        """Fraction of the bound: useful model flops per second achievable at
+        the dominant-term time, relative to peak compute."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return (self.model_flops / t) / (self.chips * PEAK_FLOPS)
+
+    def to_dict(self):
+        return {
+            "flops": self.flops, "bytes": self.bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, n_active: int) -> float:
+    """6*N*D for training, 2*N*D for inference (D = tokens processed)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # one decode step
+
+
+def analytic_corrections(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Extra FLOPs invisible to cost_analysis: trip counts of time-serial
+    scans (sLSTM recurrent matmul; mLSTM inter-chunk state update)."""
+    if shape.kind == "decode":
+        return 0.0
+    b, s = shape.global_batch, shape.seq_len
+    layers = []
+    for period, count in cfg.stacks():
+        layers += list(period) * count
+    n_sl = layers.count("slstm")
+    n_ml = layers.count("mlstm")
+    extra = 0.0
+    mult = 3.0 if shape.kind == "train" else 1.0     # fwd+bwd for train
+    if n_sl:
+        d = cfg.d_model
+        per_step = b * (2 * d * 4 * d + 16 * d)      # W_h matmul + gates
+        extra += mult * n_sl * (s - 1) * per_step
+    if n_ml:
+        h, hd = cfg.n_heads, cfg.head_dim
+        nc = max(s // 256, 1)
+        per_chunk = b * h * (6 * hd * hd + 4 * hd)
+        extra += mult * n_ml * (nc - 1) * per_chunk
+    return extra

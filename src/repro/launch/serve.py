@@ -1,0 +1,80 @@
+"""Serving driver: batched prefill + decode with a durable request
+registry (the paper's set as serving metadata).
+
+Completed request ids are inserted into a SOFT DurableSet; a crash loses
+the volatile index but not the registry, so after recovery the server
+knows exactly which requests had completed (no double-billing /
+re-generation) -- durable linearizability doing real work.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b-smoke \
+      --requests 8 --gen 16 [--crash]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import DurableSet
+from repro.models import model as M
+from repro.models.sharding import CPU_CTX
+from repro.train import steps as TS
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b-smoke")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--crash", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prefill_step, decode_step = TS.make_serve_steps(cfg, CPU_CTX)
+    prefill_step = jax.jit(prefill_step)
+    decode_step = jax.jit(decode_step)
+
+    registry = DurableSet(1024, mode="soft")
+    b = args.requests
+    max_seq = args.prompt_len + args.gen
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, args.prompt_len)),
+                       jnp.int32)
+    batch = {"tokens": toks}
+
+    t0 = time.time()
+    caches = M.init_cache(cfg, b, max_seq)
+    caches, logits = prefill_step(params, batch, caches)
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    out = [nxt]
+    for _ in range(args.gen - 1):
+        caches, nxt, logits = decode_step(params, caches, nxt)
+        out.append(nxt)
+    gen = jnp.concatenate(out, axis=1)
+    jax.block_until_ready(gen)
+    dt = time.time() - t0
+    print(f"served {b} requests x {args.gen} tokens in {dt:.2f}s "
+          f"({b * args.gen / dt:.1f} tok/s)")
+
+    # durably record completions: one psync per request (SOFT bound)
+    req_ids = np.arange(1000, 1000 + b, dtype=np.int32)
+    registry.insert(req_ids, np.asarray(gen[:, -1]))
+    print(f"registry: {len(registry)} completed, psyncs={registry.psyncs} "
+          f"(== #requests)")
+
+    if args.crash:
+        registry.crash_and_recover()
+        done = np.array(registry.contains(req_ids))
+        assert done.all()
+        print(f"after crash+recovery: all {b} completions still registered")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,183 @@
+"""Per-cell (arch x shape x mesh) input specs + shardings for the dry-run.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input (no device allocation); ``cell_shardings`` the matching
+NamedSharding trees.  ``make_shard_ctx`` decides the activation layout
+(batch shardability, sequence-sharded decode caches).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.sharding import ShardCtx
+from repro.models import model as M
+from repro.train import steps as TS
+
+
+def make_shard_ctx(cfg: ModelConfig, shape: ShapeConfig,
+                   mesh: jax.sharding.Mesh, opt: bool = False) -> ShardCtx:
+    multi_pod = "pod" in mesh.axis_names
+    dp_size = mesh.shape["data"] * (mesh.shape["pod"] if multi_pod else 1)
+    tp = mesh.shape["model"]
+    batch_ok = shape.global_batch % dp_size == 0
+    # sequence-sharded decode cache: standard-attn archs whose kv-head count
+    # cannot cover the TP axis, with a TP-divisible cache window
+    w = cfg.window if cfg.attn_kind == "swa" or cfg.family == "hybrid" \
+        else shape.seq_len
+    seq_shard = (shape.kind == "decode" and not cfg.mla
+                 and cfg.family != "ssm"
+                 and w % tp == 0)
+    fsdp = True
+    if opt and shape.kind == "decode":
+        # OPTIMIZED serving layout (EXPERIMENTS.md §Perf): keep params
+        # TP-sharded but replicated over the data axis -- decode must not
+        # all-gather the weights every token.  Only when the TP shard fits.
+        from repro.models.params import param_count
+        per_dev = param_count(cfg) * 2 / tp            # bf16
+        if per_dev < 11 * 2 ** 30:
+            fsdp = False
+    return ShardCtx(enabled=True,
+                    pod_axis="pod" if multi_pod else None,
+                    batch_shardable=batch_ok,
+                    seq_shard_cache=seq_shard,
+                    sp_activations=shape.kind in ("train", "prefill"),
+                    fsdp_params=fsdp)
+
+
+def _dp(ctx: ShardCtx):
+    return ctx.dp()
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step inputs (batch part only)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {
+            "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "vlm":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cdt)
+            batch["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        elif cfg.family == "audio":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, cfg.enc_seq,
+                                                    cfg.d_model), cdt)
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.family == "vlm":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), cdt)
+            batch["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        elif cfg.family == "audio":
+            batch["embeds"] = jax.ShapeDtypeStruct((b, cfg.enc_seq,
+                                                    cfg.d_model), cdt)
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardCtx):
+    dp = _dp(ctx)
+    out: Dict[str, Any] = {}
+    for k in input_specs(cfg, shape):
+        if k == "positions":
+            out[k] = P(None, dp, None)
+        elif k == "embeds":
+            out[k] = P(dp, None, None)
+        else:
+            out[k] = P(dp, None)
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardCtx,
+                 mesh) -> Any:
+    """PartitionSpec tree matching M.init_cache's structure."""
+    dp = _dp(ctx)
+    tp = ctx.tp()
+    tps = mesh.shape["model"]
+    abs_cache = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+
+    def spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        shp = leaf.shape
+        d = [None] * len(shp)
+        # leading dims: (stack, batch, ...) except top-level "pos" (batch,)
+        bdim = 0 if name == "pos" else 1
+        if dp is not None and shp[bdim] % _sz(mesh, dp) == 0:
+            d[bdim] = dp
+        if name in ("k", "v") and ctx.seq_shard_cache and \
+                shp[bdim + 1] % tps == 0:
+            d[bdim + 1] = tp                      # sequence-sharded cache
+        elif name in ("h",) and len(shp) == bdim + 2 and shp[-1] % tps == 0:
+            d[-1] = tp                            # rglru state width
+        elif name == "conv" and shp[-1] % tps == 0:
+            d[-1] = tp
+        return P(*d)
+
+    flat = jax.tree_util.tree_flatten_with_path(abs_cache)
+    specs = [spec(p, l) for p, l in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def _sz(mesh, axes):
+    if isinstance(axes, (tuple, list)):
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axes]
+
+
+def to_shardings(mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cell_abstract_and_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                                mesh, opt: bool = False):
+    """Returns (step_fn, abstract_args, in_shardings, out_shardings, ctx)."""
+    from repro.models.params import param_pspecs
+    ctx = make_shard_ctx(cfg, shape, mesh, opt=opt)
+    dp = _dp(ctx)
+    batch_abs = input_specs(cfg, shape)
+    batch_sh = to_shardings(mesh, batch_pspecs(cfg, shape, ctx))
+    pspec = param_pspecs(cfg, ctx, mesh=mesh)
+    psh = to_shardings(mesh, pspec)
+
+    if shape.kind == "train":
+        from repro.optim.adamw import AdamWState
+        step = TS.make_train_step(cfg, ctx, grad_accum=cfg.grad_accum)
+        state_abs = TS.abstract_train_state(cfg)
+        opt_sh = to_shardings(mesh, param_pspecs(cfg, ctx, opt=True, mesh=mesh))
+        state_sh = TS.TrainState(
+            params=psh,
+            opt=AdamWState(step=NamedSharding(mesh, P()), m=opt_sh, v=opt_sh))
+        rep = NamedSharding(mesh, P())
+        metrics_sh = {"ce": rep, "aux": rep, "loss": rep, "grad_norm": rep}
+        return (step, (state_abs, batch_abs), (state_sh, batch_sh),
+                (state_sh, metrics_sh), ctx)
+
+    prefill_step, decode_step = TS.make_serve_steps(cfg, ctx)
+    cache_abs = M.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    cache_sh = to_shardings(mesh, cache_pspecs(cfg, shape, ctx, mesh))
+    params_abs = M.abstract_params(cfg)
+    logits_sh = NamedSharding(mesh, P(dp, None))
+    if shape.kind == "prefill":
+        return (prefill_step, (params_abs, batch_abs, cache_abs),
+                (psh, batch_sh, cache_sh), (cache_sh, logits_sh), ctx)
+    tok_abs = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, P(dp, None))
+    return (decode_step, (params_abs, cache_abs, tok_abs),
+            (psh, cache_sh, tok_sh), (cache_sh, tok_sh, logits_sh), ctx)

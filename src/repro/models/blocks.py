@@ -1,0 +1,292 @@
+"""Per-kind block application for train / prefill / decode.
+
+Block kinds: attn, moe, enc (bidirectional), dec (whisper decoder with
+cross-attention), mlstm, slstm, rglru.  Pre-norm residual throughout.
+
+MLA (minicpm3): train/prefill materializes per-head keys from the latent
+(non-absorbed); decode runs *absorbed* attention in the latent space so the
+cache is only (r + rope_dim) per token -- the architecture's point.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import ShardCtx
+from repro.models import layers as L
+from repro.models import seqmix as SM
+from repro.models.moe import moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-block (standard GQA path)
+# ---------------------------------------------------------------------------
+
+def _attn_train(p, x, cfg, ctx, positions, window):
+    q, k, v = L.qkv_project(p, x, cfg, positions)
+    q = L.constrain(ctx, q, "dp", None, "tp", None)
+    out = L.attention_dense(ctx, q, k, v, _pos2d(positions, x),
+                            _pos2d(positions, x), window)
+    return out.reshape(x.shape[0], x.shape[1], -1) @ p["wo"].astype(x.dtype)
+
+
+def _pos2d(positions, x):
+    """(B,S) view of positions (M-RoPE uses the temporal section for masks)."""
+    return positions[0] if positions.ndim == 3 else positions
+
+
+def _attn_prefill(p, x, cfg, ctx, positions, window, cache):
+    q, k, v = L.qkv_project(p, x, cfg, positions)
+    out = L.attention_dense(ctx, q, k, v, _pos2d(positions, x),
+                            _pos2d(positions, x), window)
+    pos0 = jnp.zeros((x.shape[0],), jnp.int32)
+    ck, cv = L.cache_write(cache["k"], cache["v"], k, v, pos0)
+    cache = {**cache, "k": ck, "v": cv}
+    return out.reshape(x.shape[0], x.shape[1], -1) @ p["wo"].astype(x.dtype), cache
+
+
+def _attn_decode(p, x, cfg, ctx, pos, cache):
+    b = x.shape[0]
+    positions = pos[:, None]                              # (B,1)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(pos[None, :, None], (3, b, 1))
+    q, k, v = L.qkv_project(p, x, cfg, positions)
+    w = cache["k"].shape[1]
+    ck, cv = L.cache_write(cache["k"], cache["v"], k, v, pos)
+    valid = jnp.minimum(pos + 1, w)
+    out = L.attention_decode(ctx, q, ck, cv, valid)
+    return (out.reshape(b, 1, -1) @ p["wo"].astype(x.dtype),
+            {**cache, "k": ck, "v": cv})
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (minicpm3)
+# ---------------------------------------------------------------------------
+
+def _mla_project_q(p, x, cfg):
+    b, s = x.shape[0], x.shape[1]
+    dt = x.dtype
+    q = (x @ p["wq_a"].astype(dt)) @ p["wq_b"].astype(dt)
+    q = q.reshape(b, s, cfg.n_heads, cfg.head_dim + cfg.rope_dim)
+    return q[..., :cfg.head_dim], q[..., cfg.head_dim:]   # nope, rope parts
+
+
+def _mla_train(p, x, cfg, ctx, positions, window):
+    b, s = x.shape[0], x.shape[1]
+    dt = x.dtype
+    r, rd, h, hd = cfg.kv_lora_rank, cfg.rope_dim, cfg.n_heads, cfg.head_dim
+    q_nope, q_rope = _mla_project_q(p, x, cfg)
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    lat_full = x @ p["wkv_a"].astype(dt)                  # (B,S,r+rd)
+    lat, k_rope = lat_full[..., :r], lat_full[..., r:]
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    k_nope = (lat @ p["wk_b"].astype(dt)).reshape(b, s, h, hd)
+    v = (lat @ p["wv_b"].astype(dt)).reshape(b, s, h, hd)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, rd))], -1)
+    pos2 = _pos2d(positions, x)
+    out = L.attention_dense(ctx, q, k, v, pos2, pos2, window)
+    return out.reshape(b, s, h * hd) @ p["wo"].astype(dt)
+
+
+def _mla_prefill(p, x, cfg, ctx, positions, window, cache):
+    dt = x.dtype
+    r = cfg.kv_lora_rank
+    out = _mla_train(p, x, cfg, ctx, positions, window)
+    lat_full = x @ p["wkv_a"].astype(dt)
+    lat, k_rope = lat_full[..., :r], lat_full[..., r:]
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions,
+                          cfg.rope_theta)[:, :, 0]
+    pos0 = jnp.zeros((x.shape[0],), jnp.int32)
+    clat, ckr = L.cache_write(cache["lat"][..., None, :],
+                              cache["kr"][..., None, :],
+                              lat[..., None, :], k_rope[..., None, :], pos0)
+    return out, {"lat": clat[..., 0, :], "kr": ckr[..., 0, :]}
+
+
+def _mla_decode(p, x, cfg, ctx, pos, cache):
+    """Absorbed MLA decode: attention entirely in the latent space."""
+    b = x.shape[0]
+    dt = x.dtype
+    r, rd, h, hd = cfg.kv_lora_rank, cfg.rope_dim, cfg.n_heads, cfg.head_dim
+    positions = pos[:, None]
+    q_nope, q_rope = _mla_project_q(p, x, cfg)            # (B,1,H,hd/rd)
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    lat_full = x @ p["wkv_a"].astype(dt)
+    lat, k_rope = lat_full[..., :r], lat_full[..., r:]
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions,
+                          cfg.rope_theta)[:, :, 0]
+    clat, ckr = L.cache_write(cache["lat"][..., None, :],
+                              cache["kr"][..., None, :],
+                              lat[..., None, :], k_rope[..., None, :], pos)
+    clat, ckr = clat[..., 0, :], ckr[..., 0, :]           # (B,W,r), (B,W,rd)
+    w = clat.shape[1]
+    valid = jnp.minimum(pos + 1, w)
+
+    wk_b = p["wk_b"].astype(dt).reshape(r, h, hd)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wk_b.astype(jnp.float32))          # absorb W_uk
+    logits = jnp.einsum("bhr,bwr->bhw", q_lat, clat.astype(jnp.float32)) + \
+        jnp.einsum("bhd,bwd->bhw", q_rope[:, 0].astype(jnp.float32),
+                   ckr.astype(jnp.float32))
+    logits = logits / math.sqrt(hd + rd)
+    mask = jnp.arange(w)[None, None, :] < valid[:, None, None]
+    logits = jnp.where(mask, logits, L.NEG_INF)
+    pr = jax.nn.softmax(logits, axis=-1)
+    ctx_lat = jnp.einsum("bhw,bwr->bhr", pr, clat.astype(jnp.float32))
+    wv_b = p["wv_b"].astype(dt).reshape(r, h, hd)
+    out = jnp.einsum("bhr,rhd->bhd", ctx_lat, wv_b.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(dt)
+    return out @ p["wo"].astype(dt), {"lat": clat, "kr": ckr}
+
+
+# ---------------------------------------------------------------------------
+# Whisper cross-attention
+# ---------------------------------------------------------------------------
+
+def _cross_attn(p, x, enc_kv, cfg, ctx):
+    """x (B,S,d); enc_kv {'xk','xv'} (B,Senc,KV,hd) precomputed."""
+    b, s = x.shape[0], x.shape[1]
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k, v = enc_kv["xk"], enc_kv["xv"]
+    se = k.shape[1]
+    qp = jnp.zeros((b, s), jnp.int32)
+    kp = jnp.zeros((b, se), jnp.int32)
+    out = L.attention_dense(ctx, q, k, v, qp, kp, None, causal=False)
+    return out.reshape(b, s, -1) @ p["wo"].astype(dt)
+
+
+def cross_kv(p, enc_out, cfg):
+    b, se = enc_out.shape[0], enc_out.shape[1]
+    dt = enc_out.dtype
+    k = (enc_out @ p["wk"].astype(dt)).reshape(b, se, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ p["wv"].astype(dt)).reshape(b, se, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Block dispatch
+# ---------------------------------------------------------------------------
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_seq: int,
+                     dtype) -> Dict[str, Any]:
+    w = L.cache_window(cfg, max_seq)
+    if kind in ("attn", "moe", "dec"):
+        if cfg.mla and kind != "dec":
+            c = {"lat": jnp.zeros((batch, w, cfg.kv_lora_rank), dtype),
+                 "kr": jnp.zeros((batch, w, cfg.rope_dim), dtype)}
+        else:
+            wloc = min(w, cfg.window) if (kind == "attn" and cfg.family == "hybrid") else w
+            c = {"k": jnp.zeros((batch, wloc, cfg.n_kv_heads, cfg.head_dim), dtype),
+                 "v": jnp.zeros((batch, wloc, cfg.n_kv_heads, cfg.head_dim), dtype)}
+        if kind == "dec":
+            c["xk"] = jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads,
+                                 cfg.head_dim), dtype)
+            c["xv"] = jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads,
+                                 cfg.head_dim), dtype)
+        return c
+    if kind == "mlstm":
+        return SM.mlstm_cache(cfg, batch)
+    if kind == "slstm":
+        return SM.slstm_cache(cfg, batch)
+    if kind == "rglru":
+        return SM.rglru_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def apply_block(kind: str, p: Dict[str, Any], x: jax.Array, *,
+                cfg: ModelConfig, ctx: ShardCtx, mode: str,
+                positions=None, cache=None, pos=None, enc_out=None
+                ) -> Tuple[jax.Array, Optional[Dict[str, Any]], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.window if cfg.attn_kind == "swa" else None
+    if kind == "attn" and cfg.family == "hybrid":
+        window = cfg.window                               # local attention
+    x = L.constrain(ctx, x, "dp", "sp", None)
+
+    # ---- mixer ----
+    h = L.norm(p["ln1"], x, cfg)
+    if kind in ("attn", "moe", "enc", "dec"):
+        if cfg.mla and kind in ("attn", "moe"):
+            if mode == "train":
+                mix = _mla_train(p["attn"], h, cfg, ctx, positions, window)
+            elif mode == "prefill":
+                mix, cache = _mla_prefill(p["attn"], h, cfg, ctx, positions,
+                                          window, cache)
+            else:
+                mix, cache = _mla_decode(p["attn"], h, cfg, ctx, pos, cache)
+        elif kind == "enc":
+            q, k, v = L.qkv_project(p["attn"], h, cfg, positions)
+            pos2 = _pos2d(positions, h)
+            mix = L.attention_dense(ctx, q, k, v, pos2, pos2, None,
+                                    causal=False)
+            mix = mix.reshape(h.shape[0], h.shape[1], -1) @ \
+                p["attn"]["wo"].astype(h.dtype)
+        else:
+            if mode == "train":
+                mix = _attn_train(p["attn"], h, cfg, ctx, positions, window)
+            elif mode == "prefill":
+                mix, cache = _attn_prefill(p["attn"], h, cfg, ctx, positions,
+                                           window, cache)
+            else:
+                mix, cache = _attn_decode(p["attn"], h, cfg, ctx, pos, cache)
+        x = x + mix
+        # ---- whisper cross-attention ----
+        if kind == "dec":
+            hx = L.norm(p["lnx"], x, cfg)
+            if mode == "train":
+                xk, xv = cross_kv(p["xattn"], enc_out, cfg)
+                enc_kv = {"xk": xk, "xv": xv}
+            elif mode == "prefill":
+                xk, xv = cross_kv(p["xattn"], enc_out, cfg)
+                cache = {**cache, "xk": xk, "xv": xv}
+                enc_kv = cache
+            else:
+                enc_kv = cache
+            x = x + _cross_attn(p["xattn"], hx, enc_kv, cfg, ctx)
+        # ---- ffn ----
+        h2 = L.norm(p["ln2"], x, cfg)
+        if kind == "moe":
+            ff, aux = moe_ffn(p["moe"], h2, cfg, ctx)
+        else:
+            ff = L.mlp(p["mlp"], h2, ctx)
+        x = x + ff
+        return x, cache, aux
+
+    # ---- recurrent mixers (the parallel form also yields the final state
+    # for prefill -- no serial replay needed) ----
+    if kind == "mlstm":
+        if mode == "decode":
+            mix, cache = SM.mlstm_decode(p["mix"], h, cache, cfg)
+        elif mode == "prefill":
+            mix, cache = SM.mlstm_seq(p["mix"], h, cfg, ctx, return_state=True)
+        else:
+            mix = SM.mlstm_seq(p["mix"], h, cfg, ctx)
+        return x + mix, cache, aux
+    if kind == "slstm":
+        if mode == "decode":
+            mix, cache = SM.slstm_decode(p["mix"], h, cache, cfg)
+        elif mode == "prefill":
+            mix, cache = SM.slstm_seq(p["mix"], h, cfg, ctx, return_state=True)
+        else:
+            mix = SM.slstm_seq(p["mix"], h, cfg, ctx)
+        x = x + mix
+        h2 = L.norm(p["ln2"], x, cfg)
+        return x + L.mlp(p["mlp"], h2, ctx), cache, aux
+    if kind == "rglru":
+        if mode == "decode":
+            mix, cache = SM.rglru_decode(p["mix"], h, cache, cfg)
+        elif mode == "prefill":
+            mix, cache = SM.rglru_seq(p["mix"], h, cfg, ctx, return_state=True)
+        else:
+            mix = SM.rglru_seq(p["mix"], h, cfg, ctx)
+        x = x + mix
+        h2 = L.norm(p["ln2"], x, cfg)
+        return x + L.mlp(p["mlp"], h2, ctx), cache, aux
+    raise ValueError(kind)

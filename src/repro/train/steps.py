@@ -1,0 +1,99 @@
+"""Train / serve step builders: loss + grad + AdamW update, microbatch
+gradient accumulation, and the serving entry points used by the dry-run.
+
+``train_step`` is the function the dry-run lowers for ``train_*`` shapes;
+``prefill_step`` / ``decode_serve_step`` for the inference shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.sharding import ShardCtx
+from repro.optim import adamw
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+
+
+def make_train_step(cfg: ModelConfig, ctx: ShardCtx,
+                    opt_cfg: Optional[adamw.AdamWConfig] = None,
+                    grad_accum: int = 1):
+    opt_cfg = opt_cfg or adamw.AdamWConfig(state_dtype=cfg.opt_dtype)
+
+    def loss(params, batch):
+        return M.loss_fn(params, batch, cfg, ctx)
+
+    def train_step(state: TrainState, batch: Dict[str, Any]):
+        if grad_accum == 1:
+            (l, metrics), grads = jax.value_and_grad(
+                loss, has_aux=True)(state.params, batch)
+        else:
+            # python-unrolled microbatches (NOT lax.scan): XLA reuses the
+            # per-micro activation buffers sequentially -- peak activation
+            # memory drops by grad_accum x -- and cost_analysis still counts
+            # every microbatch (scan bodies are counted once).
+            def mb_slice(x, i):
+                m = x.shape[1] // grad_accum if x.ndim > 2 and x.shape[0] == 3 \
+                    else x.shape[0] // grad_accum
+                if x.ndim > 2 and x.shape[0] == 3:      # M-RoPE positions
+                    return x[:, i * m:(i + 1) * m]
+                return x[i * m:(i + 1) * m]
+
+            grads = None
+            l = 0.0
+            metrics = None
+            for i in range(grad_accum):
+                mb = jax.tree.map(lambda x: mb_slice(x, i), batch)
+                if grads is not None:
+                    # barrier: sequence microbatches, else XLA schedules all
+                    # forwards before any backward (peak memory x grad_accum)
+                    mb, grads = jax.lax.optimization_barrier((mb, grads))
+                (li, mi), gi = jax.value_and_grad(loss, has_aux=True)(
+                    state.params, mb)
+                grads = gi if grads is None else jax.tree.map(
+                    jnp.add, grads, gi)
+                l = l + li
+                metrics = mi
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            l = l / grad_accum
+        new_params, new_opt, gnorm = adamw.update(
+            grads, state.opt, state.params, opt_cfg)
+        metrics = dict(metrics, loss=l, grad_norm=gnorm)
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def make_serve_steps(cfg: ModelConfig, ctx: ShardCtx):
+    def prefill_step(params, batch, caches):
+        return M.prefill(params, batch, caches, cfg, ctx)
+
+    def decode_serve_step(params, caches, tokens):
+        caches, logits = M.decode_step(params, caches, tokens, cfg, ctx)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return caches, next_tok, logits
+
+    return prefill_step, decode_serve_step
+
+
+def init_train_state(cfg: ModelConfig, rng,
+                     opt_cfg: Optional[adamw.AdamWConfig] = None) -> TrainState:
+    opt_cfg = opt_cfg or adamw.AdamWConfig(state_dtype=cfg.opt_dtype)
+    params = M.init_params(cfg, rng)
+    return TrainState(params, adamw.init(params, opt_cfg))
+
+
+def abstract_train_state(cfg: ModelConfig,
+                         opt_cfg: Optional[adamw.AdamWConfig] = None
+                         ) -> TrainState:
+    opt_cfg = opt_cfg or adamw.AdamWConfig(state_dtype=cfg.opt_dtype)
+    pa = M.abstract_params(cfg)
+    return TrainState(pa, adamw.abstract_state(pa, opt_cfg))

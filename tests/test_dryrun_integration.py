@@ -1,0 +1,44 @@
+"""Integration: one real dry-run cell (512 fake devices, production mesh)
+in a subprocess -- the XLA device-count flag must not leak into this
+process, so the cell runs via ``python -m repro.launch.dryrun``."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_cell_whisper(tmp_path):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-base", "--shape", "decode_32k", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.load(open(tmp_path / "whisper-base_decode_32k_1pod.json"))
+    assert rec["chips"] == 256
+    assert rec["memory"]["total_per_device"] < 16 * 2 ** 30
+    assert rec["roofline"]["flops"] > 0
+
+
+def test_input_specs_all_cells_build():
+    """Every applicable (arch x shape) cell must produce abstract inputs
+    without touching devices."""
+    from repro.configs.base import SHAPES, get_config, cell_applicable
+    from repro.configs.all import ASSIGNED
+    from repro.launch.specs import input_specs
+    n = 0
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, _ = cell_applicable(cfg, shape)
+            if not ok:
+                continue
+            specs = input_specs(cfg, shape)
+            assert all(hasattr(s, "shape") for s in specs.values())
+            n += 1
+    assert n == 34        # 40 cells - 6 documented long_500k skips

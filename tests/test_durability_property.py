@@ -1,0 +1,72 @@
+"""Property-based durable-linearizability tests (hypothesis).
+
+The adversary chooses: the op sequence, the crash point (an event budget
+that may land inside an operation), and the per-node cache-eviction bias.
+After crash + recovery, the recovered set must reflect every completed
+operation, with only the single pending operation allowed to be ambiguous
+-- Definition A.2 of the paper specialized to sequential (per-lane)
+histories.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import OracleSet, DurableSet, MODES
+import jax.numpy as jnp
+
+ops_strategy = st.lists(
+    st.tuples(st.sampled_from(["insert", "remove", "contains"]),
+              st.integers(0, 7)),
+    min_size=1, max_size=24)
+
+
+@settings(max_examples=200, deadline=None)
+@given(mode=st.sampled_from(MODES), ops=ops_strategy,
+       crash_budget=st.integers(0, 120),
+       evictions=st.lists(st.integers(0, 6), min_size=16, max_size=16))
+def test_durable_linearizability(mode, ops, crash_budget, evictions):
+    o = OracleSet(16, mode=mode)
+    left = crash_budget
+    for kind, key in ops:
+        before = o.events
+        fn = getattr(o, kind)
+        args = (key, key * 10) if kind == "insert" else (key,)
+        res = fn(*args, budget=max(left, 0))
+        spent = o.events - before
+        left -= spent + (1 if res is None else 0)
+        if res is None:          # crash hit inside this op
+            break
+    img = o.crash(list(evictions))
+    rec = OracleSet.recover(img)
+    ok, msg = o.check_recovery(rec)
+    assert ok, msg
+
+
+@settings(max_examples=50, deadline=None)
+@given(mode=st.sampled_from(MODES),
+       keys=st.lists(st.integers(0, 31), min_size=1, max_size=32),
+       u=st.floats(0.0, 0.999))
+def test_jax_crash_recovery_preserves_completed_ops(mode, keys, u):
+    """Batch-boundary crashes: every completed batched op must survive
+    (all three algorithms psync before returning)."""
+    s = DurableSet(128, mode=mode)
+    arr = np.array(keys, dtype=np.int32)
+    s.insert(arr, arr * 3)
+    rem = arr[: len(arr) // 2]
+    if len(rem):
+        s.remove(rem)
+    expect = set(arr.tolist()) - set(rem.tolist())
+    s.crash_and_recover(jnp.full(128, u))
+    got = np.array(s.contains(np.arange(32)))
+    assert {i for i in range(32) if got[i]} == expect
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 40), mode=st.sampled_from(MODES))
+def test_recovery_idempotent(n, mode):
+    s = DurableSet(128, mode=mode)
+    arr = np.arange(n, dtype=np.int32)
+    s.insert(arr, arr)
+    s.crash_and_recover()
+    size1 = len(s)
+    s.crash_and_recover()
+    assert len(s) == size1 == n

@@ -1,0 +1,123 @@
+"""Unit + equivalence tests for the JAX durable-set core."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DurableSet, OracleSet, MODES, VALID,
+                        crash_and_recover, make_state, insert_batch,
+                        remove_batch, contains_batch)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_basic_ops(mode):
+    s = DurableSet(128, mode=mode)
+    ok = np.array(s.insert([5, 6, 7, 6], [50, 60, 70, 61]))
+    assert list(ok) == [True, True, True, False]
+    assert len(s) == 3
+    c = np.array(s.contains([5, 6, 7, 8]))
+    assert list(c) == [True, True, True, False]
+    ok = np.array(s.remove([6, 8, 6]))
+    assert list(ok) == [True, False, False]
+    assert len(s) == 2
+    assert list(np.array(s.contains([5, 6, 7]))) == [True, False, True]
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_psync_counts_match_paper_bounds(mode):
+    """SOFT: exactly 1 psync per successful update, 0 per read (the Cohen
+    et al. lower bound).  Link-free: 1 per update in the uncontended case.
+    Log-free: 2 per update (pointer persist)."""
+    s = DurableSet(256, mode=mode)
+    s.insert(np.arange(50), np.arange(50))
+    p_ins = s.psyncs
+    s.contains(np.arange(50))
+    p_read = s.psyncs - p_ins
+    s.remove(np.arange(50))
+    p_rem = s.psyncs - p_ins - p_read
+    assert p_read == 0                       # reads free in steady state
+    if mode in ("soft", "linkfree"):
+        assert p_ins == 50 and p_rem == 50   # exactly one per update
+    else:
+        assert p_ins == 100 and p_rem == 100  # log-free persists pointers
+
+
+def test_soft_read_psync_free_under_contention():
+    s = DurableSet(64, mode="soft")
+    s.insert([1, 1, 1, 1], [1, 1, 1, 1])
+    assert s.psyncs == 1                     # losers helped, no extra psync
+    base = s.psyncs
+    s.contains([1, 1, 2, 2])
+    assert s.psyncs == base
+
+
+def test_linkfree_contention_extra_psyncs():
+    """Duplicate lanes model the paper's high-contention flag race."""
+    s = DurableSet(64, mode="linkfree")
+    s.insert([1, 1, 1, 1], [1, 1, 1, 1])
+    assert s.psyncs == 4                     # 1 winner + 3 helper flushes
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_crash_recovery_roundtrip(mode):
+    s = DurableSet(256, mode=mode)
+    s.insert(np.arange(100), np.arange(100) * 2)
+    s.remove(np.arange(0, 100, 2))
+    expect = {int(k) for k in range(1, 100, 2)}
+    s.crash_and_recover(jnp.ones(256) * 0.99)   # adversarial eviction
+    got = np.array(s.contains(np.arange(100)))
+    assert {i for i in range(100) if got[i]} == expect
+    assert len(s) == len(expect)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_jax_matches_oracle_random_workload(mode):
+    rng = np.random.default_rng(7)
+    s = DurableSet(512, mode=mode)
+    o = OracleSet(512, mode=mode)
+    for _ in range(20):
+        op = rng.choice(["insert", "remove", "contains"])
+        keys = rng.integers(0, 64, 16).astype(np.int32)
+        if op == "insert":
+            vals = rng.integers(0, 1000, 16).astype(np.int32)
+            got = np.array(s.insert(keys, vals))
+            exp = [o.insert(int(k), int(v)) for k, v in zip(keys, vals)]
+        elif op == "remove":
+            got = np.array(s.remove(keys))
+            exp = [o.remove(int(k)) for k in keys]
+        else:
+            got = np.array(s.contains(keys))
+            exp = [o.contains(int(k)) for k in keys]
+        assert list(got) == exp, (op, keys)
+    # psync accounting: SOFT is schedule-independent (helped ops are free),
+    # so batch == sequential exactly; link-free/log-free batches model the
+    # paper's contention flushes that a sequential schedule elides, so the
+    # batched count may only EXCEED the sequential one.
+    if mode == "soft":
+        assert s.psyncs == o.psyncs
+    else:
+        assert s.psyncs >= o.psyncs
+
+
+def test_overflow_latch():
+    s = DurableSet(8, mode="soft")
+    s.insert(np.arange(16), np.arange(16))
+    assert bool(s.state.overflow)
+
+
+def test_scan_index_mode():
+    s = DurableSet(64, mode="linkfree", index="scan")
+    s.insert([3, 1, 2], [30, 10, 20])
+    assert list(np.array(s.contains([1, 2, 3, 4]))) == [True, True, True, False]
+    s.remove([2])
+    assert list(np.array(s.contains([1, 2, 3]))) == [True, False, True]
+
+
+def test_functional_core_jit_stability():
+    st = make_state(64)
+    keys = jnp.arange(8, dtype=jnp.int32)
+    st, ok = insert_batch(st, keys, keys, mode="soft")
+    st2, c = contains_batch(st, keys, mode="soft")
+    assert bool(jnp.all(c))
+    st3, r = remove_batch(st2, keys[:4], mode="soft")
+    assert bool(jnp.all(r))
+    assert int(st3.size) == 4

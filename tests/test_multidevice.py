@@ -1,0 +1,102 @@
+"""Multi-device integration (subprocess with 8 fake CPU devices): GPipe
+pipeline correctness, sharded training step, and elastic checkpoint
+restore onto a different mesh."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    # ---- 1) GPipe over 4 stages matches sequential ----
+    from repro.launch.pipeline import gpipe_fn
+    mesh_p = jax.make_mesh((4,), ("pipe",),
+                           axis_types=(jax.sharding.AxisType.Auto,))
+    rng = np.random.default_rng(0)
+    ws = jnp.asarray(rng.standard_normal((4, 8, 8)) * 0.3, jnp.float32)
+    xs = jnp.asarray(rng.standard_normal((6, 2, 8)), jnp.float32)
+    run = gpipe_fn(lambda w, x: jnp.tanh(x @ w), mesh_p)
+    got = run(ws, xs)
+    ref = xs
+    for i in range(4):
+        ref = jnp.tanh(ref @ ws[i])
+    np.testing.assert_allclose(np.array(got), np.array(ref), atol=1e-5)
+    print("gpipe OK")
+
+    # ---- 2) sharded train step on a 4x2 mesh, smoke config ----
+    from repro.configs.base import get_config
+    from repro.launch.meshctx import mesh_context
+    from repro.launch.specs import make_shard_ctx, batch_pspecs, to_shardings
+    from repro.configs.base import ShapeConfig
+    from repro.models import model as M
+    from repro.models.params import param_pspecs
+    from repro.optim import adamw
+    from repro.train import steps as TS
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_config("qwen3-32b-smoke")
+    shape = ShapeConfig("t", 32, 8, "train")
+    ctx = make_shard_ctx(cfg, shape, mesh)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, warmup=1, total_steps=10,
+                                state_dtype="float32")
+    state = TS.init_train_state(cfg, jax.random.PRNGKey(0), opt_cfg)
+    psh = to_shardings(mesh, param_pspecs(cfg, ctx, mesh=mesh))
+    state = TS.TrainState(
+        params=jax.device_put(state.params, psh),
+        opt=state.opt._replace(
+            m=jax.device_put(state.opt.m, psh),
+            v=jax.device_put(state.opt.v, psh)))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (8, 33), 0, cfg.vocab)
+    batch = {"tokens": tok[:, :-1], "labels": tok[:, 1:]}
+    bsh = to_shardings(mesh, batch_pspecs(cfg, shape, ctx))
+    batch = jax.device_put(batch, bsh)
+    with mesh_context(mesh):
+        step = jax.jit(TS.make_train_step(cfg, ctx, opt_cfg))
+        state2, metrics = step(state, batch)
+        l0 = float(metrics["loss"])
+        state2, metrics = step(state2, batch)
+    assert np.isfinite(l0) and np.isfinite(float(metrics["loss"]))
+    # verify a param is actually sharded over the mesh
+    wq = state2.params["stack_0"]["b0_attn"]["attn"]["wq"]
+    assert len(wq.sharding.device_set) > 1
+    print("sharded train OK", l0, float(metrics["loss"]))
+
+    # ---- 3) elastic restore: save sharded -> restore on another mesh ----
+    import tempfile
+    from repro.store.checkpoint import CheckpointManager
+    d = tempfile.mkdtemp()
+    mgr = CheckpointManager(d, keep=2)
+    mgr.save(1, jax.tree.map(np.asarray, state2.params))
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    ctx2 = make_shard_ctx(cfg, shape, mesh2)
+    psh2 = to_shardings(mesh2, param_pspecs(cfg, ctx2, mesh=mesh2))
+    like = M.abstract_params(cfg)
+    restored = mgr.restore(like=like, shardings=psh2)
+    wq2 = restored["stack_0"]["b0_attn"]["attn"]["wq"]
+    np.testing.assert_array_equal(
+        np.asarray(wq2, np.float32), np.asarray(wq, np.float32))
+    assert wq2.sharding != wq.sharding
+    mgr.close()
+    print("elastic restore OK")
+""")
+
+
+@pytest.mark.slow
+def test_multidevice_pipeline_sharding_elastic():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    assert "gpipe OK" in r.stdout
+    assert "sharded train OK" in r.stdout
+    assert "elastic restore OK" in r.stdout
