@@ -1,13 +1,21 @@
 """Shared driver for the paper's throughput experiments.
 
 Maps the paper's per-thread mixed workload onto batched lanes: each
-"round" splits the lane budget into contains / insert / remove lanes by
-the read percentage, mirroring the 50-50 insert/remove split of Section 6.
-Reports ops/sec (wall clock, jitted, warmed) and simulated psyncs/op --
-the quantity the paper's NVM throughput is proportional to.
+"round" is ONE mixed contains/insert/remove batch (the real serving
+traffic shape) executed by a single ``engine.apply_batch`` dispatch, with
+the lane budget split by the read percentage and updates split 50-50
+insert/remove as in Section 6.  Reports ops/sec (wall clock, jitted,
+warmed) and simulated psyncs/op -- the quantity the paper's NVM
+throughput is proportional to.
+
+Suites that model the paper's *hash* experiments take a ``backend``
+argument ("probe" by default; ``benchmarks/run.py --backend bucket``
+swaps in the Pallas-kernel bucket backend).  List experiments always
+use "scan".
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import Dict
@@ -16,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import durable_set as DS
+from repro.core import engine as E
+from repro.core.engine import (SetSpec, OP_CONTAINS, OP_INSERT, OP_REMOVE)
 
 
 @dataclass
@@ -27,48 +36,42 @@ class Result:
     rounds: int
 
 
-def run_workload(mode: str, index: str, capacity: int, key_range: int,
+def run_workload(mode: str, backend: str, capacity: int, key_range: int,
                  batch: int, read_pct: int, rounds: int = 30,
                  seed: int = 0, prefill: bool = True) -> Result:
     rng = np.random.default_rng(seed)
-    state = DS.make_state(capacity)
+    spec = SetSpec(capacity=capacity, mode=mode, backend=backend)
+    state = E.make_state(spec)
     if prefill:      # paper: fill with half the key range
+        # SetState is backend-independent, so setup always goes through the
+        # cheap probe backend; only the measured rounds use spec.backend.
+        pre = dataclasses.replace(spec, backend="probe")
         keys = rng.choice(key_range, key_range // 2, replace=False)
         for i in range(0, len(keys), batch):
             chunk = np.resize(keys[i:i + batch], batch).astype(np.int32)
-            state, _ = DS.insert_batch(state, jnp.asarray(chunk),
-                                       jnp.asarray(chunk), mode=mode,
-                                       index=index)
+            state, _ = E.insert(state, jnp.asarray(chunk),
+                                jnp.asarray(chunk), spec=pre)
 
     n_read = batch * read_pct // 100
     n_ins = (batch - n_read) // 2
     n_rem = batch - n_read - n_ins
+    ops = jnp.asarray(np.concatenate([
+        np.full(n_read, OP_CONTAINS), np.full(n_ins, OP_INSERT),
+        np.full(n_rem, OP_REMOVE)]).astype(np.int32))
 
-    @jax.jit
-    def round_fn(state, kr, ki, km):
-        state, _ = DS.contains_batch(state, kr, mode=mode, index=index)
-        if n_ins:
-            state, _ = DS.insert_batch(state, ki, ki, mode=mode, index=index)
-        if n_rem:
-            state, _ = DS.remove_batch(state, km, mode=mode, index=index)
-        return state
+    def keyset():
+        return jnp.asarray(rng.integers(0, key_range, batch), jnp.int32)
 
-    def keysets():
-        return (jnp.asarray(rng.integers(0, key_range, max(n_read, 1)),
-                            jnp.int32),
-                jnp.asarray(rng.integers(0, key_range, max(n_ins, 1)),
-                            jnp.int32),
-                jnp.asarray(rng.integers(0, key_range, max(n_rem, 1)),
-                            jnp.int32))
-
-    # warm up compile
-    state = round_fn(state, *keysets())
+    # warm up compile; each round is ONE jitted mixed-batch dispatch
+    k = keyset()
+    state, _ = E.apply_batch(state, ops, k, k, spec=spec)
     jax.block_until_ready(state.keys)
     p0 = int(state.n_psync)
     o0 = int(state.n_ops)
     t0 = time.perf_counter()
     for _ in range(rounds):
-        state = round_fn(state, *keysets())
+        k = keyset()
+        state, _ = E.apply_batch(state, ops, k, k, spec=spec)
     jax.block_until_ready(state.keys)
     dt = time.perf_counter() - t0
     d_ops = int(state.n_ops) - o0

@@ -4,7 +4,7 @@ from benchmarks.common import run_workload, fmt_row
 MODES = ("soft", "linkfree", "logfree")
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, backend: str = "probe"):
     rows = []
     scan_ranges = (16, 64, 256) if quick else (16, 64, 256, 1024, 4096)
     probe_ranges = (1 << 10, 1 << 14) if quick else (1 << 10, 1 << 14, 1 << 18)
@@ -15,7 +15,7 @@ def run(quick: bool = False):
             rows.append(fmt_row(f"fig2_list_range{kr}_{mode}", r))
     for kr in probe_ranges:
         for mode in MODES:
-            r = run_workload(mode, "probe", 2 * kr, kr, 256, 90,
+            r = run_workload(mode, backend, 2 * kr, kr, 256, 90,
                              rounds=8 if quick else 20)
             rows.append(fmt_row(f"fig2_hash_range{kr}_{mode}", r))
     return rows

@@ -5,13 +5,13 @@ from benchmarks.common import run_workload, fmt_row
 MODES = ("soft", "linkfree", "logfree")
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, backend: str = "probe"):
     rows = []
     pcts = (50, 90, 100) if quick else (50, 60, 70, 80, 90, 95, 100)
     for pct in pcts:
         for mode in MODES:
-            r = run_workload(mode, "probe", 1 << 16, 1 << 15, 256, pct,
-                             rounds=8 if quick else 20)
+            r = run_workload(mode, backend, 1 << 16, 1 << 15,
+                             256, pct, rounds=8 if quick else 20)
             rows.append(fmt_row(f"fig3_hash_reads{pct}_{mode}", r))
     for pct in (50, 90, 100) if not quick else (90,):
         for mode in MODES:

@@ -1,6 +1,9 @@
 """Benchmark entry point: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV.  --quick trims sizes for CI."""
+Prints ``name,us_per_call,derived`` CSV.  --quick trims sizes for CI;
+--backend swaps the hash-experiment index backend (probe | bucket) --
+"bucket" routes lookups through the Pallas hash_probe kernel."""
 import argparse
+import inspect
 import sys
 
 
@@ -9,10 +12,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--backend", default="probe",
+                    choices=("probe", "bucket"),
+                    help="index backend for the hash experiments")
     args = ap.parse_args()
 
-    from benchmarks import (scalability, key_range, read_pct, psync_counts,
-                            recovery, checkpoint_bench)
+    from benchmarks import (scalability, key_range, read_pct,
+                            psync_counts, recovery, checkpoint_bench)
     suites = {
         "psync_counts": psync_counts,    # paper's analytical bound first
         "scalability": scalability,      # Fig 1
@@ -26,7 +32,10 @@ def main() -> None:
     for name, mod in suites.items():
         if only and name not in only:
             continue
-        for row in mod.run(quick=args.quick):
+        kwargs = {"quick": args.quick}
+        if "backend" in inspect.signature(mod.run).parameters:
+            kwargs["backend"] = args.backend
+        for row in mod.run(**kwargs):
             print(row)
             sys.stdout.flush()
 

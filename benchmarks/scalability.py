@@ -1,25 +1,26 @@
 """Paper Fig. 1: throughput as a function of parallelism (batch lanes play
-the role of threads).  Lists (scan index, 256/1024 keys) + hash (probe)."""
+the role of threads).  Lists (scan backend, 256/1024 keys) + hash
+(``backend``: probe, or bucket via run.py --backend)."""
 from benchmarks.common import run_workload, fmt_row
 
 MODES = ("soft", "linkfree", "logfree")
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, backend: str = "probe"):
     rows = []
     lanes = (4, 16, 64) if quick else (4, 16, 64, 256)
-    for key_range, index, cap in ((256, "scan", 1024), (1024, "scan", 4096),
-                                  (1 << 16, "probe", 1 << 17)):
+    for key_range, bk, cap in ((256, "scan", 1024), (1024, "scan", 4096),
+                               (1 << 16, backend, 1 << 17)):
         if quick and key_range == 1024:
             continue
         for b in lanes:
             base = None
             for mode in MODES:
-                r = run_workload(mode, index, cap, key_range, b, 90,
+                r = run_workload(mode, bk, cap, key_range, b, 90,
                                  rounds=8 if quick else 20)
                 if mode == "logfree":
                     base = r.ops_per_sec
-                rows.append((f"fig1_{index}{key_range}_lanes{b}_{mode}", r,
+                rows.append((f"fig1_{bk}{key_range}_lanes{b}_{mode}", r,
                              {}))
             # speedup over the log-free baseline (the paper's headline)
             for name, r, ex in rows[-3:]:

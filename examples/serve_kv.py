@@ -1,5 +1,6 @@
 """Serving example: batched generation + the durable request registry
-(crash-safe completion tracking via the SOFT set).
+(crash-safe completion tracking via a SOFT DurableMap on the bucket
+backend, i.e. the Pallas hash_probe lookup / recovery_scan recovery path).
 
 Run:  PYTHONPATH=src python examples/serve_kv.py
 """
@@ -8,7 +9,8 @@ from repro.launch import serve as S
 
 def main():
     S.main(["--arch", "qwen3-32b-smoke", "--requests", "8",
-            "--prompt-len", "32", "--gen", "16", "--crash"])
+            "--prompt-len", "32", "--gen", "16", "--crash",
+            "--backend", "bucket"])
 
 
 if __name__ == "__main__":

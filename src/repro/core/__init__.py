@@ -1,8 +1,14 @@
-"""Core contribution: durable lock-free sets (link-free / SOFT) in JAX."""
+"""Core contribution: durable lock-free sets (link-free / SOFT) in JAX.
+
+Public surface: ``SetSpec`` + ``DurableMap`` (see repro.core.engine /
+DESIGN.md §4).  ``DurableSet`` is kept as a deprecation shim.
+"""
 from repro.core.nvm import (FREE, INVALID, PAYLOAD, VALID, DELETED, EMPTY,
                             TOMB, hash32, crash_persisted_stage)
 from repro.core.durable_set import (SetState, make_state, insert_batch,
                                     remove_batch, contains_batch, crash,
-                                    recover, crash_and_recover, DurableSet,
-                                    MODES)
+                                    recover, crash_and_recover, MODES)
+from repro.core.engine import (SetSpec, DurableMap, DurableSet, IndexBackend,
+                               BACKENDS, register_backend, get_backend,
+                               apply_batch, OP_CONTAINS, OP_INSERT, OP_REMOVE)
 from repro.core.oracle import OracleSet

@@ -18,11 +18,18 @@ differ in *when they psync* (the paper's entire performance story):
   logfree   models David et al. [2018]: every update additionally persists
             the link write (2 psyncs per update: node + pointer), the
             baseline the paper beats by up to 3.3x.
+
+The volatile-index layer is pluggable (DESIGN.md §4): every operation body
+is an ``_*_impl`` function parameterized by a ``lookup_fn`` and an optional
+``active`` lane mask, so :mod:`repro.core.engine` can swap index backends
+(including the Pallas ``hash_probe`` kernel) and fuse a mixed contains /
+insert / remove batch into one jitted dispatch.  The jitted wrappers in this
+module keep the legacy ``index="probe"|"scan"`` string interface.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
+from typing import Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +39,20 @@ from repro.core.nvm import (FREE, INVALID, PAYLOAD, VALID, DELETED, EMPTY,
                             TOMB, hash32, crash_persisted_stage)
 
 MODES = ("linkfree", "soft", "logfree")
+
+# Counter dtype for n_psync / n_ops.  Under ``jax_enable_x64`` these are true
+# i64[] scalars; in the default 32-bit mode JAX cannot represent int64, so the
+# counters are i32[] and every increment *saturates* at INT32_MAX instead of
+# silently wrapping negative on long benchmark runs (covered by
+# tests/test_engine.py::test_counters_saturate_instead_of_wrapping).
+COUNTER_DTYPE = jax.dtypes.canonicalize_dtype(jnp.int64)
+COUNTER_MAX = jnp.iinfo(COUNTER_DTYPE).max
+
+
+def _bump(counter: jax.Array, delta) -> jax.Array:
+    """Saturating counter increment (delta >= 0): never wraps past the max."""
+    d = jnp.asarray(delta).astype(COUNTER_DTYPE)
+    return counter + jnp.minimum(d, COUNTER_MAX - counter)
 
 
 class SetState(NamedTuple):
@@ -43,9 +64,9 @@ class SetState(NamedTuple):
     flushed: jax.Array   # i32[N] stage covered by the last explicit psync
     # --- volatile index (never persisted -- the paper's core idea)
     table: jax.Array     # i32[T] node id, EMPTY or TOMB; linear probing
-    # --- accounting
-    n_psync: jax.Array   # i64[] explicit flush+fence count
-    n_ops: jax.Array     # i64[] completed operations
+    # --- accounting (COUNTER_DTYPE: i64[] under x64, saturating i32[] else)
+    n_psync: jax.Array   # explicit flush+fence count
+    n_ops: jax.Array     # completed operations
     size: jax.Array      # i32[] live member count
     overflow: jax.Array  # bool[] capacity / probe-length failure latch
 
@@ -59,8 +80,8 @@ def make_state(capacity: int, table_factor: int = 4) -> SetState:
         cur=jnp.zeros((n,), jnp.int32),
         flushed=jnp.zeros((n,), jnp.int32),
         table=jnp.full((t,), EMPTY, jnp.int32),
-        n_psync=jnp.zeros((), jnp.int32),
-        n_ops=jnp.zeros((), jnp.int32),
+        n_psync=jnp.zeros((), COUNTER_DTYPE),
+        n_ops=jnp.zeros((), COUNTER_DTYPE),
         size=jnp.zeros((), jnp.int32),
         overflow=jnp.zeros((), jnp.bool_),
     )
@@ -73,8 +94,11 @@ def make_state(capacity: int, table_factor: int = 4) -> SetState:
 
 MAX_PROBE = 128
 
+LookupFn = Callable[[SetState, jax.Array], jax.Array]
 
-def _lookup_probe(state: SetState, keys: jax.Array) -> jax.Array:
+
+def _lookup_probe(state: SetState, keys: jax.Array,
+                  max_probe: int = MAX_PROBE) -> jax.Array:
     """Vectorized linear-probe lookup -> node id or EMPTY per lane."""
     t = state.table.shape[0]
     h = (hash32(keys) & jnp.uint32(t - 1)).astype(jnp.int32)
@@ -92,7 +116,7 @@ def _lookup_probe(state: SetState, keys: jax.Array) -> jax.Array:
         done = done | match | is_empty
         return found, done
 
-    found, _ = lax.fori_loop(0, MAX_PROBE, body,
+    found, _ = lax.fori_loop(0, max_probe, body,
                              (jnp.full((b,), EMPTY, jnp.int32),
                               jnp.zeros((b,), jnp.bool_)))
     return found
@@ -113,7 +137,8 @@ def _lookup(state: SetState, keys: jax.Array, index: str) -> jax.Array:
 
 
 def _table_write(table: jax.Array, keys: jax.Array, ids: jax.Array,
-                 do: jax.Array) -> Tuple[jax.Array, jax.Array]:
+                 do: jax.Array, max_probe: int = MAX_PROBE
+                 ) -> Tuple[jax.Array, jax.Array]:
     """Insert (key -> id) pairs for lanes with do[i]; first EMPTY/TOMB slot.
 
     The fori_loop over lanes *is* the linearization order: lane i's write
@@ -136,7 +161,7 @@ def _table_write(table: jax.Array, keys: jax.Array, ids: jax.Array,
             done = done | free
             return pos_found, done
 
-        pos, done = lax.fori_loop(0, MAX_PROBE, probe,
+        pos, done = lax.fori_loop(0, max_probe, probe,
                                   (jnp.int32(0), jnp.bool_(False)))
         newt = table.at[pos].set(jnp.where(do[i] & done, ids[i], table[pos]))
         return newt, ovf | (do[i] & ~done)
@@ -145,7 +170,7 @@ def _table_write(table: jax.Array, keys: jax.Array, ids: jax.Array,
 
 
 def _table_delete(table: jax.Array, keys: jax.Array, ids: jax.Array,
-                  do: jax.Array) -> jax.Array:
+                  do: jax.Array, max_probe: int = MAX_PROBE) -> jax.Array:
     """Tombstone the slot holding id for lanes with do[i] (the trim)."""
     t = table.shape[0]
     h = (hash32(keys) & jnp.uint32(t - 1)).astype(jnp.int32)
@@ -161,7 +186,7 @@ def _table_delete(table: jax.Array, keys: jax.Array, ids: jax.Array,
             done = done | hit | stop
             return pos_found, done
 
-        pos, _ = lax.fori_loop(0, MAX_PROBE, probe,
+        pos, _ = lax.fori_loop(0, max_probe, probe,
                                (jnp.int32(-1), jnp.bool_(False)))
         ok = do[i] & (pos >= 0)
         return table.at[jnp.clip(pos, 0)].set(
@@ -188,30 +213,49 @@ def _alloc(state: SetState, need: jax.Array, count: jax.Array):
     return lane_slot, ovf
 
 
-def _dedup_first(keys: jax.Array) -> jax.Array:
-    """True for the first lane carrying each distinct key (lane-priority CAS)."""
+def _dedup_first(keys: jax.Array,
+                 active: Optional[jax.Array] = None) -> jax.Array:
+    """True for the first lane carrying each distinct key (lane-priority CAS).
+
+    With an ``active`` mask only active lanes compete: an inactive lane is
+    never "first" and never blocks a later active lane.
+    """
     b = keys.shape[0]
     same = keys[:, None] == keys[None, :]
     earlier = jnp.tril(jnp.ones((b, b), jnp.bool_), k=-1)
-    return ~(same & earlier).any(axis=1)
+    if active is None:
+        return ~(same & earlier).any(axis=1)
+    blocked = (same & earlier & active[None, :]).any(axis=1)
+    return active & ~blocked
 
 
 # ---------------------------------------------------------------------------
-# Operations
+# Operation bodies.  Each takes a lookup_fn (the pluggable index backend) and
+# an optional active-lane mask; inactive lanes are complete no-ops (no state
+# change, no psync, no n_ops, result False).  The jitted public wrappers
+# below bind lookup_fn to the legacy string index and active to all-lanes.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("mode", "index"))
-def insert_batch(state: SetState, keys: jax.Array, values: jax.Array,
-                 mode: str = "soft", index: str = "probe"
+
+def _insert_impl(state: SetState, keys: jax.Array, values: jax.Array, *,
+                 mode: str, lookup_fn: LookupFn,
+                 active: Optional[jax.Array] = None,
+                 max_probe: int = MAX_PROBE,
+                 existing: Optional[jax.Array] = None
                  ) -> Tuple[SetState, jax.Array]:
-    """Batched insert; returns success per lane (False == key already present)."""
+    """``existing`` lets a caller reuse a lookup already performed against a
+    state whose index fields (keys/cur/table) are unchanged -- lookups never
+    read the flushed/psync accounting a contains phase mutates."""
     assert mode in MODES
     b = keys.shape[0]
-    existing = _lookup(state, keys, index)
+    if active is None:
+        active = jnp.ones((b,), jnp.bool_)
+    if existing is None:
+        existing = lookup_fn(state, keys)
     found = existing >= 0
-    first = _dedup_first(keys)
+    first = _dedup_first(keys, active)
     win = first & ~found                       # lanes that insert a new node
-    lose_dup = ~first & ~found                 # lanes that lose the in-batch race
+    lose_dup = active & ~first & ~found        # lanes that lose the in-batch race
 
     count = jnp.sum(win.astype(jnp.int32))
     slots, ovf = _alloc(state, win, count)
@@ -226,7 +270,7 @@ def insert_batch(state: SetState, keys: jax.Array, values: jax.Array,
     cur = state.cur.at[sidx].set(VALID, mode="drop")
     flushed = state.flushed.at[sidx].set(VALID, mode="drop")
 
-    table, tovf = _table_write(state.table, keys, slots, win)
+    table, tovf = _table_write(state.table, keys, slots, win, max_probe)
 
     # --- psync accounting --------------------------------------------------
     new_psync = count                                        # FLUSH_INSERT / PNode.create
@@ -237,7 +281,8 @@ def insert_batch(state: SetState, keys: jax.Array, values: jax.Array,
         # false (Listing 4 lines 6-8).  The insert-flush flag elides the psync
         # when already flushed; only pre-existing *unflushed* nodes pay.
         eidx = jnp.clip(existing, 0, state.keys.shape[0] - 1)
-        helper = found & (state.flushed[eidx] < VALID) & (state.cur[eidx] == VALID)
+        helper = active & found & (state.flushed[eidx] < VALID) \
+            & (state.cur[eidx] == VALID)
         flushed = flushed.at[jnp.where(helper, eidx, 0)].max(
             jnp.where(helper, VALID, 0))
         # Contention model: duplicate lanes re-flush the winner (flag race).
@@ -249,25 +294,25 @@ def insert_batch(state: SetState, keys: jax.Array, values: jax.Array,
     ok = win
     return SetState(
         keys=keys_a, values=vals_a, cur=cur, flushed=flushed, table=table,
-        n_psync=state.n_psync + new_psync.astype(jnp.int32),
-        n_ops=state.n_ops + b,
+        n_psync=_bump(state.n_psync, new_psync),
+        n_ops=_bump(state.n_ops, jnp.sum(active.astype(jnp.int32))),
         size=state.size + count,
         overflow=state.overflow | ovf | tovf,
     ), ok
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "index"))
-def remove_batch(state: SetState, keys: jax.Array,
-                 mode: str = "soft", index: str = "probe"
-                 ) -> Tuple[SetState, jax.Array]:
-    """Batched remove; success == key was present and this lane won the race."""
+def _remove_impl(state: SetState, keys: jax.Array, *, mode: str,
+                 lookup_fn: LookupFn, active: Optional[jax.Array] = None,
+                 max_probe: int = MAX_PROBE) -> Tuple[SetState, jax.Array]:
     assert mode in MODES
     b = keys.shape[0]
-    existing = _lookup(state, keys, index)
+    if active is None:
+        active = jnp.ones((b,), jnp.bool_)
+    existing = lookup_fn(state, keys)
     found = existing >= 0
-    first = _dedup_first(keys)
+    first = _dedup_first(keys, active)
     win = first & found
-    lose_dup = ~first & found
+    lose_dup = active & ~first & found
 
     eidx = jnp.clip(existing, 0, state.keys.shape[0] - 1)
     # mark (INTEND_TO_DELETE -> destroy psync -> DELETED); flushed follows
@@ -277,7 +322,7 @@ def remove_batch(state: SetState, keys: jax.Array,
     cur = jnp.where(mark, DELETED, state.cur)
     flushed = jnp.where(mark, DELETED, state.flushed)
 
-    table = _table_delete(state.table, keys, existing, win)
+    table = _table_delete(state.table, keys, existing, win, max_probe)
 
     count = jnp.sum(win.astype(jnp.int32))
     new_psync = count                                        # FLUSH_DELETE / PNode.destroy
@@ -289,26 +334,31 @@ def remove_batch(state: SetState, keys: jax.Array,
     return SetState(
         keys=state.keys, values=state.values, cur=cur, flushed=flushed,
         table=table,
-        n_psync=state.n_psync + new_psync.astype(jnp.int32),
-        n_ops=state.n_ops + b,
+        n_psync=_bump(state.n_psync, new_psync),
+        n_ops=_bump(state.n_ops, jnp.sum(active.astype(jnp.int32))),
         size=state.size - count,
         overflow=state.overflow,
     ), win
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "index"))
-def contains_batch(state: SetState, keys: jax.Array,
-                   mode: str = "soft", index: str = "probe"
-                   ) -> Tuple[SetState, jax.Array]:
-    """Batched contains.  SOFT: zero psync (wait-free read, the bound).
-    Link-free: must ensure a positive answer is durable (FLUSH_INSERT with
-    flag elision, Listing 3 line 12).  Log-free: link-and-persist read flush
-    when the link is not yet persisted (modeled like link-free)."""
+def _contains_impl(state: SetState, keys: jax.Array, *, mode: str,
+                   lookup_fn: LookupFn, active: Optional[jax.Array] = None
+                   ) -> Tuple[SetState, jax.Array, jax.Array]:
+    """Returns (state, present-per-lane, node-id-per-lane).
+
+    SOFT: zero psync (wait-free read, the bound).  Link-free: must ensure a
+    positive answer is durable (FLUSH_INSERT with flag elision, Listing 3
+    line 12).  Log-free: link-and-persist read flush when the link is not
+    yet persisted (modeled like link-free).
+    """
     assert mode in MODES
-    existing = _lookup(state, keys, index)
+    b = keys.shape[0]
+    if active is None:
+        active = jnp.ones((b,), jnp.bool_)
+    existing = lookup_fn(state, keys)
     found = existing >= 0
     eidx = jnp.clip(existing, 0, state.keys.shape[0] - 1)
-    present = found & (state.cur[eidx] == VALID)
+    present = active & found & (state.cur[eidx] == VALID)
 
     new_psync = jnp.int32(0)
     flushed = state.flushed
@@ -318,11 +368,45 @@ def contains_batch(state: SetState, keys: jax.Array,
             jnp.where(need, VALID, 0))
         new_psync = jnp.sum(need.astype(jnp.int32))
 
-    return state._replace(
+    state = state._replace(
         flushed=flushed,
-        n_psync=state.n_psync + new_psync.astype(jnp.int32),
-        n_ops=state.n_ops + keys.shape[0],
-    ), present
+        n_psync=_bump(state.n_psync, new_psync),
+        n_ops=_bump(state.n_ops, jnp.sum(active.astype(jnp.int32))),
+    )
+    return state, present, existing
+
+
+# ---------------------------------------------------------------------------
+# Jitted public wrappers (legacy string-index interface; see
+# repro.core.engine for the SetSpec / backend-protocol surface).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("mode", "index"))
+def insert_batch(state: SetState, keys: jax.Array, values: jax.Array,
+                 mode: str = "soft", index: str = "probe"
+                 ) -> Tuple[SetState, jax.Array]:
+    """Batched insert; returns success per lane (False == key already present)."""
+    return _insert_impl(state, keys, values, mode=mode,
+                        lookup_fn=lambda s, k: _lookup(s, k, index))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "index"))
+def remove_batch(state: SetState, keys: jax.Array,
+                 mode: str = "soft", index: str = "probe"
+                 ) -> Tuple[SetState, jax.Array]:
+    """Batched remove; success == key was present and this lane won the race."""
+    return _remove_impl(state, keys, mode=mode,
+                        lookup_fn=lambda s, k: _lookup(s, k, index))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "index"))
+def contains_batch(state: SetState, keys: jax.Array,
+                   mode: str = "soft", index: str = "probe"
+                   ) -> Tuple[SetState, jax.Array]:
+    """Batched contains (see _contains_impl for the per-mode psync story)."""
+    state, present, _ = _contains_impl(
+        state, keys, mode=mode, lookup_fn=lambda s, k: _lookup(s, k, index))
+    return state, present
 
 
 # ---------------------------------------------------------------------------
@@ -337,14 +421,13 @@ def crash(state: SetState, u: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Arra
     return persisted, state.keys, state.values
 
 
-@functools.partial(jax.jit, static_argnames=("table_factor",))
-def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array,
-            table_factor: int = 4) -> SetState:
-    """Rebuild a fresh set from the durable areas (Sections 3.5 / 4.6):
-    persisted == VALID -> member; everything else -> free list.  No psync is
-    ever issued: payloads are already durable."""
+def _rebuild_from_member(member: jax.Array, keys: jax.Array,
+                         values: jax.Array, table_factor: int = 4,
+                         max_probe: int = MAX_PROBE) -> SetState:
+    """Shared recovery rebuild: member mask -> fresh SetState (free list +
+    probe-table reconstruction).  Used by both the legacy recover() and the
+    engine's backend-aware recover."""
     n = keys.shape[0]
-    member = persisted == VALID
     state = make_state(n, table_factor)
     cur = jnp.where(member, VALID, FREE)
     state = state._replace(
@@ -354,52 +437,20 @@ def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array,
         size=jnp.sum(member.astype(jnp.int32)),
     )
     ids = jnp.arange(n, dtype=jnp.int32)
-    table, ovf = _table_write(state.table, state.keys, ids, member)
+    table, ovf = _table_write(state.table, state.keys, ids, member, max_probe)
     return state._replace(table=table, overflow=state.overflow | ovf)
+
+
+@functools.partial(jax.jit, static_argnames=("table_factor",))
+def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array,
+            table_factor: int = 4) -> SetState:
+    """Rebuild a fresh set from the durable areas (Sections 3.5 / 4.6):
+    persisted == VALID -> member; everything else -> free list.  No psync is
+    ever issued: payloads are already durable."""
+    return _rebuild_from_member(persisted == VALID, keys, values,
+                                table_factor)
 
 
 def crash_and_recover(state: SetState, u: jax.Array,
                       table_factor: int = 4) -> SetState:
     return recover(*crash(state, u), table_factor=table_factor)
-
-
-# ---------------------------------------------------------------------------
-# Convenience OO wrapper
-# ---------------------------------------------------------------------------
-
-class DurableSet:
-    """Object API over the functional core (single-controller usage)."""
-
-    def __init__(self, capacity: int, mode: str = "soft", index: str = "probe"):
-        assert mode in MODES
-        self.mode, self.index = mode, index
-        self.state = make_state(capacity)
-
-    def insert(self, keys, values):
-        self.state, ok = insert_batch(self.state, jnp.asarray(keys, jnp.int32),
-                                      jnp.asarray(values, jnp.int32),
-                                      mode=self.mode, index=self.index)
-        return ok
-
-    def remove(self, keys):
-        self.state, ok = remove_batch(self.state, jnp.asarray(keys, jnp.int32),
-                                      mode=self.mode, index=self.index)
-        return ok
-
-    def contains(self, keys):
-        self.state, ok = contains_batch(self.state, jnp.asarray(keys, jnp.int32),
-                                        mode=self.mode, index=self.index)
-        return ok
-
-    def crash_and_recover(self, u=None):
-        if u is None:
-            u = jnp.zeros_like(self.state.cur, jnp.float32)
-        self.state = crash_and_recover(self.state, u)
-        return self
-
-    @property
-    def psyncs(self):
-        return int(self.state.n_psync)
-
-    def __len__(self):
-        return int(self.state.size)

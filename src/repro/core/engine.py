@@ -1,0 +1,400 @@
+"""DurableMap engine: SetSpec config + pluggable volatile-index backends.
+
+This is the public surface of the durable-set reproduction (DESIGN.md §4).
+The paper's central idea is the split between a durable node pool and a
+*volatile* index that is rebuilt on recovery; this module makes that index a
+first-class, swappable backend instead of a string threaded through every
+call:
+
+  probe    vectorized linear-probe hash lookup over ``SetState.table``
+           (the default; pure lax, models the paper's hash-table runs)
+  scan     O(N) traversal lookup (models the paper's linked-list runs)
+  bucket   set-associative (NB buckets x W ways) lookup executed by the
+           Pallas MXU kernel ``hash_probe.probe_pallas``; recovery runs the
+           streaming Pallas kernel ``recovery_scan.scan_pallas``.  Live
+           nodes that overflow a bucket land in an exact dense stash that
+           the lookup falls back to, so the backend is correct at any load
+           factor.
+
+Everything is configured by one frozen, hashable :class:`SetSpec` (capacity,
+algorithm mode, backend, table/bucket geometry, pallas-interpret flag) that
+is passed as a static jit argument -- no loose kwargs.
+
+The serving-shaped entrypoint is :func:`apply_batch`: a mixed
+contains/insert/remove lane vector executed in ONE jitted dispatch.  Mixed
+batches linearize phase-by-phase (all contains, then all inserts, then all
+removes) with lane priority inside a phase -- the same deterministic
+stand-in for CAS order the core uses (DESIGN.md §2).
+
+:class:`DurableMap` is the OO façade; :class:`DurableSet` remains as a thin
+deprecation shim over it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from typing import Callable, Dict, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import durable_set as DS
+from repro.core.durable_set import SetState, MODES
+from repro.core.nvm import VALID
+from repro.kernels.hash_probe import ops as hp_ops
+from repro.kernels.recovery_scan import ops as rs_ops
+
+# Mixed-batch op codes for apply_batch.
+OP_CONTAINS, OP_INSERT, OP_REMOVE = 0, 1, 2
+
+# f32-exact integer budget of the MXU one-hot gather (see hash_probe.kernel).
+_F32_EXACT = 1 << 24
+
+
+@dataclasses.dataclass(frozen=True)
+class SetSpec:
+    """Frozen configuration of a durable map (hashable => static jit arg).
+
+    capacity      node-pool size N (max live members)
+    mode          psync algorithm: "soft" | "linkfree" | "logfree"
+    backend       volatile-index backend name (see BACKENDS)
+    table_factor  probe-table slots per node (power-of-2 rounded)
+    max_probe     linear-probe cap for the probe table
+    n_buckets     bucket backend: bucket count NB (0 => derived so the
+                  table holds 2x capacity at width w: next pow2 of 2N/W)
+    bucket_width  bucket backend: ways per bucket W
+    use_pallas    bucket backend: run the Pallas kernels (else jnp refs)
+    interpret     pallas_call interpret mode (True for CPU / debugging)
+    """
+    capacity: int
+    mode: str = "soft"
+    backend: str = "probe"
+    table_factor: int = 4
+    max_probe: int = 128
+    n_buckets: int = 0
+    bucket_width: int = 8
+    use_pallas: bool = True
+    interpret: bool = True
+
+    def __post_init__(self):
+        if self.capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {self.capacity}")
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        for f in ("table_factor", "max_probe", "bucket_width"):
+            if getattr(self, f) < 1:
+                raise ValueError(f"{f} must be >= 1")
+        if self.n_buckets < 0 or (self.n_buckets &
+                                  (self.n_buckets - 1)) != 0:
+            raise ValueError("n_buckets must be 0 (derived) or a power of "
+                             f"two, got {self.n_buckets}")
+        if self.backend == "bucket" and self.capacity >= _F32_EXACT:
+            raise ValueError("bucket backend: capacity exceeds the f32-exact "
+                             f"node-id budget ({_F32_EXACT})")
+
+    def bucket_geometry(self) -> Tuple[int, int]:
+        """Resolved (NB, W) for the bucket backend."""
+        w = self.bucket_width
+        nb = self.n_buckets
+        if nb == 0:
+            target = max(8, -(-2 * self.capacity // w))   # ceil(2N / W)
+            nb = 1 << (target - 1).bit_length()
+        return nb, w
+
+
+class IndexBackend(Protocol):
+    """A volatile-index backend: lookup on the hot path, validity
+    classification on the recovery path.  Register with
+    :func:`register_backend`; implementations must be pure/jittable with
+    ``spec`` static."""
+    name: str
+
+    def lookup(self, spec: SetSpec, state: SetState,
+               keys: jax.Array) -> jax.Array:
+        """Node id per query lane, or EMPTY (-1) when absent."""
+        ...
+
+    def recover_scan(self, spec: SetSpec, persisted: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+        """persisted stages i32[N] -> (member mask bool[N], stage hist i32[5])."""
+        ...
+
+
+class ProbeBackend:
+    """The paper's hash-set experiments: linear probing over SetState.table."""
+    name = "probe"
+
+    def lookup(self, spec, state, keys):
+        return DS._lookup_probe(state, keys, max_probe=spec.max_probe)
+
+    def recover_scan(self, spec, persisted):
+        return rs_ops.recovery_scan(persisted, use_pallas=False)
+
+
+class ScanBackend:
+    """The paper's list experiments: cost dominated by full traversal."""
+    name = "scan"
+
+    def lookup(self, spec, state, keys):
+        return DS._lookup_scan(state, keys)
+
+    def recover_scan(self, spec, persisted):
+        return rs_ops.recovery_scan(persisted, use_pallas=False)
+
+
+class BucketBackend:
+    """Set-associative index probed by the Pallas MXU kernel.
+
+    ``build_buckets`` packs live nodes into an (NB, W) table; queries go
+    through ``hash_probe.ops.lookup`` (probe_pallas when use_pallas).  Live
+    nodes that overflow their bucket (load factor > W per bucket) are
+    recovered exactly via a dense stash scan, taken only when the build
+    reports overflow.  Recovery classification runs the streaming
+    ``recovery_scan`` Pallas kernel.
+    """
+    name = "bucket"
+
+    def lookup(self, spec, state, keys):
+        nb, w = spec.bucket_geometry()
+        bkeys, bids, ovf = hp_ops.build_buckets(state.keys, state.cur,
+                                                nb=nb, w=w)
+        found = hp_ops.lookup(bkeys, bids, keys, use_pallas=spec.use_pallas,
+                              interpret=spec.interpret)
+
+        def with_stash(f):
+            # only paid when the build reported spill (lax.cond branch)
+            n = state.keys.shape[0]
+            flat = bids.reshape(-1)
+            flat = jnp.where(flat >= 0, flat, n)      # -1 ways -> dropped
+            in_table = jnp.zeros((n,), jnp.bool_).at[flat].set(
+                True, mode="drop")
+            stash = (state.cur == VALID) & ~in_table
+            eq = stash[None, :] & (keys[:, None] == state.keys[None, :])
+            hit = eq.any(axis=1)
+            sid = jnp.argmax(eq, axis=1).astype(jnp.int32)
+            return jnp.where((f < 0) & hit, sid, f)
+
+        return lax.cond(ovf > 0, with_stash, lambda f: f, found)
+
+    def recover_scan(self, spec, persisted):
+        return rs_ops.recovery_scan(persisted, use_pallas=spec.use_pallas,
+                                    interpret=spec.interpret)
+
+
+BACKENDS: Dict[str, IndexBackend] = {}
+
+
+def register_backend(backend: IndexBackend) -> IndexBackend:
+    """Register an IndexBackend instance under ``backend.name``."""
+    BACKENDS[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> IndexBackend:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown index backend {name!r}; registered: "
+                       f"{sorted(BACKENDS)}") from None
+
+
+register_backend(ProbeBackend())
+register_backend(ScanBackend())
+register_backend(BucketBackend())
+
+
+def _lookup_fn(spec: SetSpec) -> DS.LookupFn:
+    backend = get_backend(spec.backend)
+    return functools.partial(backend.lookup, spec)
+
+
+# ---------------------------------------------------------------------------
+# Functional API (spec-static jitted ops)
+# ---------------------------------------------------------------------------
+
+
+def make_state(spec: SetSpec) -> SetState:
+    return DS.make_state(spec.capacity, spec.table_factor)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def insert(state: SetState, keys: jax.Array, values: jax.Array, *,
+           spec: SetSpec) -> Tuple[SetState, jax.Array]:
+    return DS._insert_impl(state, keys, values, mode=spec.mode,
+                           lookup_fn=_lookup_fn(spec),
+                           max_probe=spec.max_probe)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def remove(state: SetState, keys: jax.Array, *,
+           spec: SetSpec) -> Tuple[SetState, jax.Array]:
+    return DS._remove_impl(state, keys, mode=spec.mode,
+                           lookup_fn=_lookup_fn(spec),
+                           max_probe=spec.max_probe)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def contains(state: SetState, keys: jax.Array, *,
+             spec: SetSpec) -> Tuple[SetState, jax.Array]:
+    state, present, _ = DS._contains_impl(state, keys, mode=spec.mode,
+                                          lookup_fn=_lookup_fn(spec))
+    return state, present
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def get(state: SetState, keys: jax.Array, *, spec: SetSpec,
+        default: int = 0) -> Tuple[SetState, jax.Array, jax.Array]:
+    """Value lookup: (state, values-or-default, present).  Read-path psync
+    semantics are identical to contains (SOFT: free; others may flush)."""
+    state, present, ids = DS._contains_impl(state, keys, mode=spec.mode,
+                                            lookup_fn=_lookup_fn(spec))
+    eidx = jnp.clip(ids, 0, state.values.shape[0] - 1)
+    vals = jnp.where(present, state.values[eidx], jnp.int32(default))
+    return state, vals, present
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def apply_batch(state: SetState, ops: jax.Array, keys: jax.Array,
+                values: jax.Array, *, spec: SetSpec
+                ) -> Tuple[SetState, jax.Array]:
+    """Mixed-op batch in one jitted dispatch: the serving traffic shape.
+
+    ``ops`` i32[B] of OP_CONTAINS / OP_INSERT / OP_REMOVE selects each
+    lane's operation on ``keys``/``values``.  Linearization: the contains
+    phase observes the pre-batch state, then inserts, then removes (so a
+    remove lane deletes a key inserted by an earlier lane of the same
+    batch), with lane priority inside each phase.  Returns success/presence
+    per lane.
+    """
+    lookup_fn = _lookup_fn(spec)
+    is_c = ops == OP_CONTAINS
+    is_i = ops == OP_INSERT
+    is_r = ops == OP_REMOVE
+    state, r_c, ids = DS._contains_impl(state, keys, mode=spec.mode,
+                                        lookup_fn=lookup_fn, active=is_c)
+    # the contains phase only touches flushed/psync accounting, never the
+    # index fields, so its lookup is still valid for the insert phase
+    state, r_i = DS._insert_impl(state, keys, values, mode=spec.mode,
+                                 lookup_fn=lookup_fn, active=is_i,
+                                 max_probe=spec.max_probe, existing=ids)
+    state, r_r = DS._remove_impl(state, keys, mode=spec.mode,
+                                 lookup_fn=lookup_fn, active=is_r,
+                                 max_probe=spec.max_probe)
+    return state, jnp.where(is_i, r_i, jnp.where(is_r, r_r, r_c))
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array, *,
+            spec: SetSpec) -> Tuple[SetState, jax.Array]:
+    """Rebuild from the durable areas (Sections 3.5 / 4.6) through the
+    spec's backend: classification via backend.recover_scan (the Pallas
+    recovery_scan kernel for the bucket backend), then index rebuild.
+    Returns (state, stage histogram i32[5]) -- the recovery telemetry.
+    No psync is ever issued: payloads are already durable."""
+    backend = get_backend(spec.backend)
+    member, hist = backend.recover_scan(spec, persisted)
+    state = DS._rebuild_from_member(member, keys, values, spec.table_factor,
+                                    spec.max_probe)
+    return state, hist
+
+
+def crash_and_recover(state: SetState, u: jax.Array, *, spec: SetSpec
+                      ) -> Tuple[SetState, jax.Array]:
+    return recover(*DS.crash(state, u), spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# OO façade
+# ---------------------------------------------------------------------------
+
+
+class DurableMap:
+    """Object API over the engine (single-controller usage).
+
+    >>> m = DurableMap(SetSpec(capacity=1024, mode="soft", backend="bucket"))
+    >>> m.insert([1, 2], [10, 20])
+    >>> m.contains([1, 3])          # -> [True, False]
+    >>> m.crash_and_recover()       # volatile index lost + rebuilt
+    """
+
+    def __init__(self, spec: SetSpec = None, **spec_kwargs):
+        if spec is None:
+            spec = SetSpec(**spec_kwargs)
+        elif spec_kwargs:
+            spec = dataclasses.replace(spec, **spec_kwargs)
+        get_backend(spec.backend)        # fail fast on unknown backends
+        self.spec = spec
+        self.state = make_state(spec)
+        self.last_recovery_hist = None   # i32[5] stage histogram, post-recover
+
+    @staticmethod
+    def _i32(x) -> jax.Array:
+        return jnp.asarray(x, jnp.int32)
+
+    def insert(self, keys, values=None):
+        keys = self._i32(keys)
+        values = keys if values is None else self._i32(values)
+        self.state, ok = insert(self.state, keys, values, spec=self.spec)
+        return ok
+
+    def remove(self, keys):
+        self.state, ok = remove(self.state, self._i32(keys), spec=self.spec)
+        return ok
+
+    def contains(self, keys):
+        self.state, ok = contains(self.state, self._i32(keys), spec=self.spec)
+        return ok
+
+    def get(self, keys, default: int = 0):
+        """Values for present keys, ``default`` otherwise."""
+        self.state, vals, _ = get(self.state, self._i32(keys),
+                                  spec=self.spec, default=default)
+        return vals
+
+    def apply(self, ops, keys, values=None):
+        """Mixed contains/insert/remove batch; see :func:`apply_batch`."""
+        keys = self._i32(keys)
+        values = keys if values is None else self._i32(values)
+        self.state, res = apply_batch(self.state, self._i32(ops), keys,
+                                      values, spec=self.spec)
+        return res
+
+    def crash_and_recover(self, u=None):
+        if u is None:
+            u = jnp.zeros_like(self.state.cur, jnp.float32)
+        self.state, hist = crash_and_recover(self.state, u, spec=self.spec)
+        self.last_recovery_hist = np.asarray(hist)
+        return self
+
+    @property
+    def psyncs(self):
+        return int(self.state.n_psync)
+
+    @property
+    def ops(self):
+        return int(self.state.n_ops)
+
+    def __len__(self):
+        return int(self.state.size)
+
+    def __repr__(self):
+        return (f"DurableMap(size={len(self)}, psyncs={self.psyncs}, "
+                f"spec={self.spec})")
+
+
+class DurableSet(DurableMap):
+    """Deprecated legacy surface: use ``DurableMap(SetSpec(...))``.
+
+    The old ``index=`` kwarg maps 1:1 onto backend names.
+    """
+
+    def __init__(self, capacity: int, mode: str = "soft",
+                 index: str = "probe"):
+        warnings.warn("DurableSet is deprecated; use "
+                      "DurableMap(SetSpec(capacity=..., mode=..., "
+                      "backend=...))", DeprecationWarning, stacklevel=2)
+        super().__init__(SetSpec(capacity=capacity, mode=mode, backend=index))
+        self.mode, self.index = mode, index

@@ -1,6 +1,7 @@
 """Pallas TPU kernel: bucketized hash-table probe via MXU one-hot gather.
 
-TPU adaptation of the paper's hash-bucket traversal (DESIGN.md §2): pointer
+TPU adaptation of the paper's hash-bucket traversal (DESIGN.md §2) -- the
+lookup path of the "bucket" index backend (DESIGN.md §4): pointer
 chasing does not map to a systolic machine, so the volatile index becomes a
 set-associative table (NB buckets x W ways) and the random bucket *gather*
 is performed on the MXU as a one-hot matmul -- (Bq, NBt) @ (NBt, W) -- which

@@ -1,7 +1,8 @@
 """Pallas TPU kernel: recovery validity scan over the durable areas.
 
 After a crash the recovery procedure must classify every node in every
-durable area (Sections 3.5 / 4.6).  On TPU this is a bandwidth-bound
+durable area (Sections 3.5 / 4.6; DESIGN.md §2) -- reachable from the
+public API through the "bucket" index backend (DESIGN.md §4).  On TPU this is a bandwidth-bound
 streaming pass; the kernel tiles the stage vector through VMEM, emits the
 member mask, and accumulates a per-stage histogram (the recovery telemetry:
 how many nodes were torn / deleted / live) in a VMEM accumulator that is

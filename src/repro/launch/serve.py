@@ -1,13 +1,15 @@
 """Serving driver: batched prefill + decode with a durable request
 registry (the paper's set as serving metadata).
 
-Completed request ids are inserted into a SOFT DurableSet; a crash loses
+Completed request ids are inserted into a SOFT DurableMap; a crash loses
 the volatile index but not the registry, so after recovery the server
 knows exactly which requests had completed (no double-billing /
-re-generation) -- durable linearizability doing real work.
+re-generation) -- durable linearizability doing real work.  --backend
+picks the registry's index backend ("bucket" = the Pallas hash_probe /
+recovery_scan kernel path, DESIGN.md §4).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b-smoke \
-      --requests 8 --gen 16 [--crash]
+      --requests 8 --gen 16 [--crash] [--backend bucket]
 """
 from __future__ import annotations
 
@@ -19,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import DurableSet
+from repro.core import DurableMap, SetSpec
 from repro.models import model as M
 from repro.models.sharding import CPU_CTX
 from repro.train import steps as TS
@@ -32,6 +34,9 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--crash", action="store_true")
+    ap.add_argument("--backend", default="probe",
+                    choices=("probe", "scan", "bucket"),
+                    help="registry index backend (bucket = Pallas kernels)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -40,7 +45,8 @@ def main(argv=None):
     prefill_step = jax.jit(prefill_step)
     decode_step = jax.jit(decode_step)
 
-    registry = DurableSet(1024, mode="soft")
+    registry = DurableMap(SetSpec(capacity=1024, mode="soft",
+                                  backend=args.backend))
     b = args.requests
     max_seq = args.prompt_len + args.gen
     rng = np.random.default_rng(0)
@@ -65,8 +71,8 @@ def main(argv=None):
     # durably record completions: one psync per request (SOFT bound)
     req_ids = np.arange(1000, 1000 + b, dtype=np.int32)
     registry.insert(req_ids, np.asarray(gen[:, -1]))
-    print(f"registry: {len(registry)} completed, psyncs={registry.psyncs} "
-          f"(== #requests)")
+    print(f"registry[{args.backend}]: {len(registry)} completed, "
+          f"psyncs={registry.psyncs} (== #requests)")
 
     if args.crash:
         registry.crash_and_recover()

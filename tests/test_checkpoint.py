@@ -7,6 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="dev-only dependency; pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.store.checkpoint import CheckpointManager

@@ -8,9 +8,14 @@ operation, with only the single pending operation allowed to be ambiguous
 histories.
 """
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="dev-only dependency; pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import OracleSet, DurableSet, MODES
+from repro.core import OracleSet, DurableMap, SetSpec, MODES
 import jax.numpy as jnp
 
 ops_strategy = st.lists(
@@ -48,7 +53,7 @@ def test_durable_linearizability(mode, ops, crash_budget, evictions):
 def test_jax_crash_recovery_preserves_completed_ops(mode, keys, u):
     """Batch-boundary crashes: every completed batched op must survive
     (all three algorithms psync before returning)."""
-    s = DurableSet(128, mode=mode)
+    s = DurableMap(SetSpec(capacity=128, mode=mode))
     arr = np.array(keys, dtype=np.int32)
     s.insert(arr, arr * 3)
     rem = arr[: len(arr) // 2]
@@ -63,7 +68,7 @@ def test_jax_crash_recovery_preserves_completed_ops(mode, keys, u):
 @settings(max_examples=50, deadline=None)
 @given(n=st.integers(1, 40), mode=st.sampled_from(MODES))
 def test_recovery_idempotent(n, mode):
-    s = DurableSet(128, mode=mode)
+    s = DurableMap(SetSpec(capacity=128, mode=mode))
     arr = np.arange(n, dtype=np.int32)
     s.insert(arr, arr)
     s.crash_and_recover()

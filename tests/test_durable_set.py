@@ -1,25 +1,25 @@
-"""Unit + equivalence tests for the JAX durable-set core."""
+"""Unit + equivalence tests for the JAX durable-set core (DurableMap API)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (DurableSet, OracleSet, MODES, VALID,
-                        crash_and_recover, make_state, insert_batch,
+from repro.core import (DurableMap, DurableSet, SetSpec, OracleSet, MODES,
+                        VALID, crash_and_recover, make_state, insert_batch,
                         remove_batch, contains_batch)
 
 
 @pytest.mark.parametrize("mode", MODES)
 def test_basic_ops(mode):
-    s = DurableSet(128, mode=mode)
-    ok = np.array(s.insert([5, 6, 7, 6], [50, 60, 70, 61]))
+    m = DurableMap(SetSpec(capacity=128, mode=mode))
+    ok = np.array(m.insert([5, 6, 7, 6], [50, 60, 70, 61]))
     assert list(ok) == [True, True, True, False]
-    assert len(s) == 3
-    c = np.array(s.contains([5, 6, 7, 8]))
+    assert len(m) == 3
+    c = np.array(m.contains([5, 6, 7, 8]))
     assert list(c) == [True, True, True, False]
-    ok = np.array(s.remove([6, 8, 6]))
+    ok = np.array(m.remove([6, 8, 6]))
     assert list(ok) == [True, False, False]
-    assert len(s) == 2
-    assert list(np.array(s.contains([5, 6, 7]))) == [True, False, True]
+    assert len(m) == 2
+    assert list(np.array(m.contains([5, 6, 7]))) == [True, False, True]
 
 
 @pytest.mark.parametrize("mode", MODES)
@@ -27,13 +27,13 @@ def test_psync_counts_match_paper_bounds(mode):
     """SOFT: exactly 1 psync per successful update, 0 per read (the Cohen
     et al. lower bound).  Link-free: 1 per update in the uncontended case.
     Log-free: 2 per update (pointer persist)."""
-    s = DurableSet(256, mode=mode)
-    s.insert(np.arange(50), np.arange(50))
-    p_ins = s.psyncs
-    s.contains(np.arange(50))
-    p_read = s.psyncs - p_ins
-    s.remove(np.arange(50))
-    p_rem = s.psyncs - p_ins - p_read
+    m = DurableMap(SetSpec(capacity=256, mode=mode))
+    m.insert(np.arange(50), np.arange(50))
+    p_ins = m.psyncs
+    m.contains(np.arange(50))
+    p_read = m.psyncs - p_ins
+    m.remove(np.arange(50))
+    p_rem = m.psyncs - p_ins - p_read
     assert p_read == 0                       # reads free in steady state
     if mode in ("soft", "linkfree"):
         assert p_ins == 50 and p_rem == 50   # exactly one per update
@@ -42,50 +42,50 @@ def test_psync_counts_match_paper_bounds(mode):
 
 
 def test_soft_read_psync_free_under_contention():
-    s = DurableSet(64, mode="soft")
-    s.insert([1, 1, 1, 1], [1, 1, 1, 1])
-    assert s.psyncs == 1                     # losers helped, no extra psync
-    base = s.psyncs
-    s.contains([1, 1, 2, 2])
-    assert s.psyncs == base
+    m = DurableMap(SetSpec(capacity=64, mode="soft"))
+    m.insert([1, 1, 1, 1], [1, 1, 1, 1])
+    assert m.psyncs == 1                     # losers helped, no extra psync
+    base = m.psyncs
+    m.contains([1, 1, 2, 2])
+    assert m.psyncs == base
 
 
 def test_linkfree_contention_extra_psyncs():
     """Duplicate lanes model the paper's high-contention flag race."""
-    s = DurableSet(64, mode="linkfree")
-    s.insert([1, 1, 1, 1], [1, 1, 1, 1])
-    assert s.psyncs == 4                     # 1 winner + 3 helper flushes
+    m = DurableMap(SetSpec(capacity=64, mode="linkfree"))
+    m.insert([1, 1, 1, 1], [1, 1, 1, 1])
+    assert m.psyncs == 4                     # 1 winner + 3 helper flushes
 
 
 @pytest.mark.parametrize("mode", MODES)
 def test_crash_recovery_roundtrip(mode):
-    s = DurableSet(256, mode=mode)
-    s.insert(np.arange(100), np.arange(100) * 2)
-    s.remove(np.arange(0, 100, 2))
+    m = DurableMap(SetSpec(capacity=256, mode=mode))
+    m.insert(np.arange(100), np.arange(100) * 2)
+    m.remove(np.arange(0, 100, 2))
     expect = {int(k) for k in range(1, 100, 2)}
-    s.crash_and_recover(jnp.ones(256) * 0.99)   # adversarial eviction
-    got = np.array(s.contains(np.arange(100)))
+    m.crash_and_recover(jnp.ones(256) * 0.99)   # adversarial eviction
+    got = np.array(m.contains(np.arange(100)))
     assert {i for i in range(100) if got[i]} == expect
-    assert len(s) == len(expect)
+    assert len(m) == len(expect)
 
 
 @pytest.mark.parametrize("mode", MODES)
 def test_jax_matches_oracle_random_workload(mode):
     rng = np.random.default_rng(7)
-    s = DurableSet(512, mode=mode)
+    m = DurableMap(SetSpec(capacity=512, mode=mode))
     o = OracleSet(512, mode=mode)
     for _ in range(20):
         op = rng.choice(["insert", "remove", "contains"])
         keys = rng.integers(0, 64, 16).astype(np.int32)
         if op == "insert":
             vals = rng.integers(0, 1000, 16).astype(np.int32)
-            got = np.array(s.insert(keys, vals))
+            got = np.array(m.insert(keys, vals))
             exp = [o.insert(int(k), int(v)) for k, v in zip(keys, vals)]
         elif op == "remove":
-            got = np.array(s.remove(keys))
+            got = np.array(m.remove(keys))
             exp = [o.remove(int(k)) for k in keys]
         else:
-            got = np.array(s.contains(keys))
+            got = np.array(m.contains(keys))
             exp = [o.contains(int(k)) for k in keys]
         assert list(got) == exp, (op, keys)
     # psync accounting: SOFT is schedule-independent (helped ops are free),
@@ -93,23 +93,41 @@ def test_jax_matches_oracle_random_workload(mode):
     # paper's contention flushes that a sequential schedule elides, so the
     # batched count may only EXCEED the sequential one.
     if mode == "soft":
-        assert s.psyncs == o.psyncs
+        assert m.psyncs == o.psyncs
     else:
-        assert s.psyncs >= o.psyncs
+        assert m.psyncs >= o.psyncs
 
 
 def test_overflow_latch():
-    s = DurableSet(8, mode="soft")
-    s.insert(np.arange(16), np.arange(16))
-    assert bool(s.state.overflow)
+    m = DurableMap(SetSpec(capacity=8, mode="soft"))
+    m.insert(np.arange(16), np.arange(16))
+    assert bool(m.state.overflow)
 
 
-def test_scan_index_mode():
-    s = DurableSet(64, mode="linkfree", index="scan")
-    s.insert([3, 1, 2], [30, 10, 20])
-    assert list(np.array(s.contains([1, 2, 3, 4]))) == [True, True, True, False]
-    s.remove([2])
-    assert list(np.array(s.contains([1, 2, 3]))) == [True, False, True]
+def test_scan_backend():
+    m = DurableMap(SetSpec(capacity=64, mode="linkfree", backend="scan"))
+    m.insert([3, 1, 2], [30, 10, 20])
+    assert list(np.array(m.contains([1, 2, 3, 4]))) == [True, True, True, False]
+    m.remove([2])
+    assert list(np.array(m.contains([1, 2, 3]))) == [True, False, True]
+
+
+def test_get_returns_values_or_default():
+    m = DurableMap(SetSpec(capacity=64, mode="soft"))
+    m.insert([1, 2, 3], [10, 20, 30])
+    base = m.psyncs
+    vals = np.array(m.get([2, 9, 3], default=-1))
+    assert list(vals) == [20, -1, 30]
+    assert m.psyncs == base                  # SOFT reads never psync
+
+
+def test_durable_set_shim_deprecated_but_working():
+    with pytest.warns(DeprecationWarning):
+        s = DurableSet(64, mode="soft", index="scan")
+    s.insert([1, 2], [10, 20])
+    assert list(np.array(s.contains([1, 3]))) == [True, False]
+    s.crash_and_recover()
+    assert len(s) == 2 and s.psyncs == 0     # recovery never psyncs
 
 
 def test_functional_core_jit_stability():

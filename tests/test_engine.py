@@ -1,0 +1,280 @@
+"""Engine tests: backend conformance, Pallas-kernel wiring, mixed-op
+apply_batch, bucket overflow/stash, TOMB-slot reuse, counter saturation."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.kernels.hash_probe.ops as hp_ops
+import repro.kernels.recovery_scan.ops as rs_ops
+from repro.core import (DurableMap, SetSpec, MODES, OracleSet, BACKENDS,
+                        OP_CONTAINS, OP_INSERT, OP_REMOVE, get_backend,
+                        register_backend, TOMB, EMPTY, VALID)
+from repro.core import engine as E
+from repro.core.durable_set import COUNTER_DTYPE, COUNTER_MAX, make_state
+from repro.core.nvm import np_hash32
+
+BACKEND_NAMES = ("probe", "scan", "bucket")
+
+
+# ---------------------------------------------------------------------------
+# Backend conformance: every registered backend passes the same
+# insert/remove/contains/crash/recover battery under every psync algorithm.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+def test_backend_conformance_battery(backend, mode):
+    m = DurableMap(SetSpec(capacity=128, mode=mode, backend=backend))
+    ok = np.array(m.insert([5, 6, 7, 6], [50, 60, 70, 61]))
+    assert list(ok) == [True, True, True, False]
+    assert len(m) == 3
+    assert list(np.array(m.contains([5, 6, 7, 8]))) == [True, True, True,
+                                                        False]
+    assert list(np.array(m.remove([6, 8, 6]))) == [True, False, False]
+    # psync accounting is backend-independent (2 live inserts + 1 remove...
+    # contention cost depends only on mode, not on the index backend)
+    probe = DurableMap(SetSpec(capacity=128, mode=mode))
+    probe.insert([5, 6, 7, 6], [50, 60, 70, 61])
+    probe.contains([5, 6, 7, 8])
+    probe.remove([6, 8, 6])
+    assert m.psyncs == probe.psyncs
+    # crash + recovery (adversarial eviction) through the backend's path
+    m.crash_and_recover(jnp.ones(128) * 0.99)
+    assert list(np.array(m.contains([5, 6, 7]))) == [True, False, True]
+    assert len(m) == 2
+    assert m.last_recovery_hist is not None
+    assert int(m.last_recovery_hist[3]) == 2      # VALID bin == live members
+
+
+@pytest.mark.parametrize("mode", ("soft", "linkfree"))
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+def test_backend_matches_oracle_random_workload(backend, mode):
+    rng = np.random.default_rng(11)
+    m = DurableMap(SetSpec(capacity=128, mode=mode, backend=backend))
+    o = OracleSet(128, mode=mode)
+    for _ in range(10):
+        op = rng.choice(["insert", "remove", "contains"])
+        keys = rng.integers(0, 32, 8).astype(np.int32)
+        if op == "insert":
+            got = np.array(m.insert(keys, keys * 2))
+            exp = [o.insert(int(k), int(k) * 2) for k in keys]
+        elif op == "remove":
+            got = np.array(m.remove(keys))
+            exp = [o.remove(int(k)) for k in keys]
+        else:
+            got = np.array(m.contains(keys))
+            exp = [o.contains(int(k)) for k in keys]
+        assert list(got) == exp, (backend, mode, op, keys)
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(KeyError, match="unknown index backend"):
+        DurableMap(SetSpec(capacity=8, backend="btree"))
+
+
+def test_spec_validates_bucket_geometry():
+    for bad in (-8, 3, 520):          # negative / non-pow2 break probe_pallas
+        with pytest.raises(ValueError, match="n_buckets"):
+            SetSpec(capacity=32, backend="bucket", n_buckets=bad)
+    SetSpec(capacity=32, backend="bucket", n_buckets=512)   # pow2 ok
+
+
+def test_register_custom_backend():
+    class Probe2(E.ProbeBackend):
+        name = "probe2"
+
+    register_backend(Probe2())
+    try:
+        m = DurableMap(SetSpec(capacity=32, backend="probe2"))
+        m.insert([1, 2])
+        assert list(np.array(m.contains([1, 3]))) == [True, False]
+    finally:
+        del BACKENDS["probe2"]
+
+
+# ---------------------------------------------------------------------------
+# Kernel wiring: the bucket backend must actually execute probe_pallas on
+# the lookup path and scan_pallas on the recovery path.
+# ---------------------------------------------------------------------------
+
+def test_bucket_backend_reaches_pallas_kernels(monkeypatch):
+    calls = {"probe": 0, "scan": 0}
+    real_probe, real_scan = hp_ops.probe_pallas, rs_ops.scan_pallas
+
+    def probe_wrap(*a, **k):
+        calls["probe"] += 1
+        return real_probe(*a, **k)
+
+    def scan_wrap(*a, **k):
+        calls["scan"] += 1
+        return real_scan(*a, **k)
+
+    monkeypatch.setattr(hp_ops, "probe_pallas", probe_wrap)
+    monkeypatch.setattr(rs_ops, "scan_pallas", scan_wrap)
+    # unique capacity => unique SetSpec => fresh jit trace hits the wrappers
+    m = DurableMap(SetSpec(capacity=136, mode="soft", backend="bucket"))
+    m.insert(np.arange(10))
+    assert calls["probe"] >= 1, "probe_pallas not on the bucket lookup path"
+    m.crash_and_recover()
+    assert calls["scan"] >= 1, "scan_pallas not on the bucket recovery path"
+    assert len(m) == 10
+
+
+def test_bucket_use_pallas_false_matches_pallas_true():
+    keys = np.arange(40, dtype=np.int32)
+    out = {}
+    for flag in (True, False):
+        m = DurableMap(SetSpec(capacity=96, mode="soft", backend="bucket",
+                               use_pallas=flag))
+        m.insert(keys, keys * 3)
+        m.remove(keys[::3])
+        out[flag] = np.array(m.contains(keys))
+    np.testing.assert_array_equal(out[True], out[False])
+
+
+# ---------------------------------------------------------------------------
+# Mixed-op apply_batch: one dispatch == the documented phase linearization.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ("soft", "linkfree"))
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+def test_apply_batch_equals_sequential_phases(backend, mode):
+    rng = np.random.default_rng(3)
+    spec = SetSpec(capacity=256, mode=mode, backend=backend)
+    a, b = DurableMap(spec), DurableMap(spec)
+    seed = np.arange(0, 24, dtype=np.int32)
+    a.insert(seed, seed)
+    b.insert(seed, seed)
+
+    ops = np.array([OP_CONTAINS] * 6 + [OP_INSERT] * 5 + [OP_REMOVE] * 5,
+                   np.int32)
+    keys = rng.integers(0, 40, ops.size).astype(np.int32)
+    res = np.array(a.apply(ops, keys, keys * 2))
+
+    exp_c = np.array(b.contains(keys[:6]))
+    exp_i = np.array(b.insert(keys[6:11], keys[6:11] * 2))
+    exp_r = np.array(b.remove(keys[11:]))
+    np.testing.assert_array_equal(res, np.concatenate([exp_c, exp_i, exp_r]))
+    assert len(a) == len(b)
+    assert a.psyncs == b.psyncs and a.ops == b.ops
+    probe_all = np.arange(40)
+    np.testing.assert_array_equal(np.array(a.contains(probe_all)),
+                                  np.array(b.contains(probe_all)))
+
+
+def test_apply_batch_phase_linearization():
+    m = DurableMap(SetSpec(capacity=32, mode="soft"))
+    # contains observes pre-batch state; a remove lane sees the insert
+    # from the same batch (phase order: contains < insert < remove).
+    res = np.array(m.apply([OP_CONTAINS, OP_INSERT, OP_REMOVE], [7, 7, 7]))
+    assert list(res) == [False, True, True]
+    assert len(m) == 0
+
+
+# ---------------------------------------------------------------------------
+# Bucket geometry: overflow at load factor > W/bucket falls into the exact
+# stash; build_buckets reports the spill.
+# ---------------------------------------------------------------------------
+
+def _colliding_keys(nb: int, count: int, start: int = 1):
+    """Distinct keys all hashing to bucket 0 of an nb-bucket table."""
+    out, k = [], start
+    while len(out) < count:
+        if int(np_hash32(np.array([k]))[0] % nb) == 0:
+            out.append(k)
+        k += 1
+    return np.array(out, np.int32)
+
+
+def test_build_buckets_overflow_count():
+    nb, w = 8, 2
+    keys = _colliding_keys(nb, w + 3)             # 5 keys -> bucket 0 of 8
+    pool = np.zeros(16, np.int32)
+    pool[: len(keys)] = keys
+    cur = np.zeros(16, np.int32)
+    cur[: len(keys)] = VALID
+    bkeys, bids, ovf = hp_ops.build_buckets(jnp.asarray(pool),
+                                            jnp.asarray(cur), nb=nb, w=w)
+    assert int(ovf) == 3                          # w fit, 3 spill
+    # the w packed ways of bucket 0 are a subset of the colliding keys
+    packed = set(np.array(bkeys)[0].tolist())
+    assert packed <= set(keys.tolist()) and len(packed) == w
+
+
+def test_bucket_backend_stash_at_high_load_factor():
+    nb, w = 8, 2
+    spec = SetSpec(capacity=64, mode="soft", backend="bucket",
+                   n_buckets=nb, bucket_width=w)
+    keys = _colliding_keys(nb, w + 3)
+    m = DurableMap(spec)
+    assert np.array(m.insert(keys, keys * 5)).all()
+    # all present even though 3 of 5 never fit in bucket 0 (stash path)
+    assert np.array(m.contains(keys)).all()
+    assert list(np.array(m.get(keys))) == [int(k) * 5 for k in keys]
+    # removal of a stashed key and of a packed key both take effect
+    assert np.array(m.remove(keys[:2])).all()
+    got = np.array(m.contains(keys))
+    assert not got[:2].any() and got[2:].all()
+    # crash/recover keeps the survivors findable through the same geometry
+    m.crash_and_recover()
+    assert np.array(m.contains(keys[2:])).all()
+
+
+# ---------------------------------------------------------------------------
+# Probe-table TOMB reuse: remove -> insert of a colliding key must reuse the
+# tombstoned slot instead of growing the chain.
+# ---------------------------------------------------------------------------
+
+def test_table_write_reuses_tomb_slot_after_remove():
+    spec = SetSpec(capacity=16, mode="soft")      # table size 64
+    t = 64
+    # three distinct keys on the same probe chain
+    buckets = {}
+    k = 1
+    while True:
+        h = int(np_hash32(np.array([k]))[0] & (t - 1))
+        buckets.setdefault(h, []).append(k)
+        if len(buckets[h]) == 3:
+            a, b, c = buckets[h]
+            break
+        k += 1
+    h = int(np_hash32(np.array([a]))[0] & (t - 1))
+
+    m = DurableMap(spec)
+    m.insert([a, b])
+    table = np.array(m.state.table)
+    assert table[h] >= 0 and table[(h + 1) % t] >= 0      # chain of two
+    m.remove([a])
+    table = np.array(m.state.table)
+    assert table[h] == TOMB                               # trimmed, not EMPTY
+    m.insert([c])
+    table = np.array(m.state.table)
+    assert table[h] >= 0, "insert must reuse the TOMB slot"
+    assert table[(h + 2) % t] == EMPTY, "chain must not grow past slot 2"
+    assert (table >= 0).sum() == 2
+    # lookups past the reused slot still find the survivor b
+    assert list(np.array(m.contains([a, b, c]))) == [False, True, True]
+
+
+# ---------------------------------------------------------------------------
+# Counter semantics: i64 under x64, saturating i32 otherwise -- never wraps.
+# ---------------------------------------------------------------------------
+
+def test_counters_use_documented_dtype():
+    st = make_state(8)
+    assert st.n_psync.dtype == COUNTER_DTYPE
+    assert st.n_ops.dtype == COUNTER_DTYPE
+
+
+def test_counters_saturate_instead_of_wrapping():
+    m = DurableMap(SetSpec(capacity=64, mode="logfree"))
+    near_max = int(COUNTER_MAX) - 5
+    m.state = m.state._replace(
+        n_psync=jnp.asarray(near_max, COUNTER_DTYPE),
+        n_ops=jnp.asarray(near_max, COUNTER_DTYPE))
+    m.insert(np.arange(20))          # logfree: 40 psyncs, 20 ops >> headroom
+    assert int(m.state.n_psync) == int(COUNTER_MAX)   # clamped, not negative
+    assert int(m.state.n_ops) == int(COUNTER_MAX)
+    m.contains(np.arange(20))        # further bumps stay clamped
+    assert int(m.state.n_ops) == int(COUNTER_MAX)
+    assert m.psyncs > 0

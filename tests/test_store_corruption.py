@@ -5,6 +5,11 @@ rule under adversarial persistence."""
 import os
 
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="dev-only dependency; pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.store.checkpoint import CheckpointManager
