@@ -1,0 +1,57 @@
+"""Canonical hash-workload benchmark with machine-readable output.
+
+Runs the mixed contains/insert/remove workload at one fixed configuration
+(capacity 65536, key range 65536, batch 1024, 90% reads -- the acceptance
+point tracked across PRs) for every psync mode x index backend and writes
+``BENCH_hash.json`` so the perf trajectory is diffable across PRs and can
+be uploaded as a CI artifact.  ``--quick`` shrinks the geometry for CI but
+keeps the JSON schema identical.
+"""
+from __future__ import annotations
+
+import json
+import platform
+
+import jax
+
+from benchmarks.common import run_workload, fmt_row
+
+MODES = ("soft", "linkfree", "logfree")
+BACKENDS = ("probe", "bucket")
+
+OUT = "BENCH_hash.json"
+
+
+def run(quick: bool = False, out: str = OUT):
+    cap, kr, batch, read_pct = (4096, 4096, 256, 90) if quick \
+        else (65536, 65536, 1024, 90)
+    rounds = 5 if quick else 10
+    payload = {
+        "config": {"capacity": cap, "key_range": kr, "batch": batch,
+                   "read_pct": read_pct, "rounds": rounds, "quick": quick,
+                   "jax": jax.__version__,
+                   "device": jax.devices()[0].platform,
+                   "machine": platform.machine()},
+        "results": {},
+    }
+    rows = []
+    for backend in BACKENDS:
+        for mode in MODES:
+            r = run_workload(mode, backend, cap, kr, batch, read_pct,
+                             rounds=rounds)
+            payload["results"][f"{mode}_{backend}"] = {
+                "ops_per_sec": r.ops_per_sec,
+                "psync_per_op": r.psync_per_op,
+                "psync_per_update": r.psync_per_update,
+            }
+            rows.append(fmt_row(f"bench_hash_{mode}_{backend}", r,
+                                {"ops_per_sec": f"{r.ops_per_sec:.0f}"}))
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    rows.append(f"bench_hash_json,0.000,path={out}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

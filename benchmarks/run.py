@@ -1,7 +1,10 @@
 """Benchmark entry point: one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV.  --quick trims sizes for CI;
 --backend swaps the hash-experiment index backend (probe | bucket) --
-"bucket" routes lookups through the Pallas hash_probe kernel."""
+"bucket" routes lookups through the Pallas hash_probe kernel.  The
+``bench_hash`` suite additionally writes ``BENCH_hash.json`` (ops/sec and
+psync/op per mode x backend at the canonical configuration) for
+cross-PR perf tracking; CI uploads it as an artifact."""
 import argparse
 import inspect
 import sys
@@ -18,9 +21,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (scalability, key_range, read_pct,
-                            psync_counts, recovery, checkpoint_bench)
+                            psync_counts, recovery, checkpoint_bench,
+                            bench_hash)
     suites = {
         "psync_counts": psync_counts,    # paper's analytical bound first
+        "bench_hash": bench_hash,        # canonical point -> BENCH_hash.json
         "scalability": scalability,      # Fig 1
         "key_range": key_range,          # Fig 2
         "read_pct": read_pct,            # Fig 3

@@ -56,7 +56,15 @@ def _bump(counter: jax.Array, delta) -> jax.Array:
 
 
 class SetState(NamedTuple):
-    """Durable areas + volatile index + psync accounting."""
+    """Durable areas + volatile index + psync accounting.
+
+    The volatile index (DESIGN.md §5) is built exactly once -- at state
+    construction / recovery -- and thereafter updated *in place* by the op
+    bodies; a crash discards it wholesale.  Backends that do not use a
+    given structure carry it at zero size (the bucket fields are (0, ...)
+    for probe/scan; see ``repro.core.engine``), so state *shape* is a
+    function of the spec that created it.
+    """
     # --- durable area (node pool); keys/values persist once stage >= PAYLOAD
     keys: jax.Array      # i32[N]
     values: jax.Array    # i32[N]
@@ -64,14 +72,24 @@ class SetState(NamedTuple):
     flushed: jax.Array   # i32[N] stage covered by the last explicit psync
     # --- volatile index (never persisted -- the paper's core idea)
     table: jax.Array     # i32[T] node id, EMPTY or TOMB; linear probing
+    bkeys: jax.Array     # i32[NB, W] bucket-table way keys (bucket backend)
+    bids: jax.Array      # i32[NB, W] bucket-table way node ids, EMPTY == free
+    skeys: jax.Array     # i32[S] dense-stash keys (bucket overflow spill)
+    sids: jax.Array      # i32[S] dense-stash node ids, EMPTY == free slot
+    stash_n: jax.Array   # i32[] stash-occupancy latch (0 => skip fallback)
     # --- accounting (COUNTER_DTYPE: i64[] under x64, saturating i32[] else)
     n_psync: jax.Array   # explicit flush+fence count
     n_ops: jax.Array     # completed operations
     size: jax.Array      # i32[] live member count
-    overflow: jax.Array  # bool[] capacity / probe-length failure latch
+    overflow: jax.Array  # bool[] capacity / probe-length / stash failure latch
 
 
-def make_state(capacity: int, table_factor: int = 4) -> SetState:
+def make_state(capacity: int, table_factor: int = 4, n_buckets: int = 0,
+               bucket_width: int = 0, stash_size: int = 0) -> SetState:
+    """Fresh state.  ``n_buckets``/``bucket_width``/``stash_size`` size the
+    incremental bucket index; zero (the default, and the legacy interface)
+    carries the bucket fields at zero size.  An all-EMPTY bucket table IS
+    the canonical empty index -- no separate bulk build is needed here."""
     n = int(capacity)
     t = 1 << max(3, (n * table_factor - 1).bit_length())
     return SetState(
@@ -80,6 +98,11 @@ def make_state(capacity: int, table_factor: int = 4) -> SetState:
         cur=jnp.zeros((n,), jnp.int32),
         flushed=jnp.zeros((n,), jnp.int32),
         table=jnp.full((t,), EMPTY, jnp.int32),
+        bkeys=jnp.zeros((n_buckets, bucket_width), jnp.int32),
+        bids=jnp.full((n_buckets, bucket_width), EMPTY, jnp.int32),
+        skeys=jnp.zeros((stash_size,), jnp.int32),
+        sids=jnp.full((stash_size,), EMPTY, jnp.int32),
+        stash_n=jnp.zeros((), jnp.int32),
         n_psync=jnp.zeros((), COUNTER_DTYPE),
         n_ops=jnp.zeros((), COUNTER_DTYPE),
         size=jnp.zeros((), jnp.int32),
@@ -95,6 +118,14 @@ def make_state(capacity: int, table_factor: int = 4) -> SetState:
 MAX_PROBE = 128
 
 LookupFn = Callable[[SetState, jax.Array], jax.Array]
+
+# Incremental index-maintenance hook (DESIGN.md §5): called by the op bodies
+# with the five bucket-index fields plus (keys, node_ids, do-lane mask) and
+# returns the updated fields plus an overflow latch.  ``None`` (probe/scan)
+# means the op bodies touch none of the bucket fields -- those backends pay
+# nothing for the bucket machinery.
+IndexUpdateFn = Callable[..., Tuple[jax.Array, jax.Array, jax.Array,
+                                    jax.Array, jax.Array, jax.Array]]
 
 
 def _lookup_probe(state: SetState, keys: jax.Array,
@@ -241,11 +272,16 @@ def _insert_impl(state: SetState, keys: jax.Array, values: jax.Array, *,
                  mode: str, lookup_fn: LookupFn,
                  active: Optional[jax.Array] = None,
                  max_probe: int = MAX_PROBE,
-                 existing: Optional[jax.Array] = None
+                 existing: Optional[jax.Array] = None,
+                 index_insert: Optional[IndexUpdateFn] = None,
+                 maintain_table: bool = True
                  ) -> Tuple[SetState, jax.Array]:
     """``existing`` lets a caller reuse a lookup already performed against a
-    state whose index fields (keys/cur/table) are unchanged -- lookups never
-    read the flushed/psync accounting a contains phase mutates."""
+    state whose index fields (keys/cur/table/buckets) are unchanged --
+    lookups never read the flushed/psync accounting a contains phase mutates.
+    ``index_insert`` is the backend's incremental bucket-index hook;
+    ``maintain_table`` is False for backends whose lookups never read the
+    linear-probe table."""
     assert mode in MODES
     b = keys.shape[0]
     if active is None:
@@ -270,7 +306,17 @@ def _insert_impl(state: SetState, keys: jax.Array, values: jax.Array, *,
     cur = state.cur.at[sidx].set(VALID, mode="drop")
     flushed = state.flushed.at[sidx].set(VALID, mode="drop")
 
-    table, tovf = _table_write(state.table, keys, slots, win, max_probe)
+    if maintain_table:
+        table, tovf = _table_write(state.table, keys, slots, win, max_probe)
+    else:
+        table, tovf = state.table, jnp.bool_(False)
+
+    bkeys, bids, skeys, sids, stash_n = (state.bkeys, state.bids, state.skeys,
+                                         state.sids, state.stash_n)
+    iovf = jnp.bool_(False)
+    if index_insert is not None:
+        bkeys, bids, skeys, sids, stash_n, iovf = index_insert(
+            bkeys, bids, skeys, sids, stash_n, keys, slots, win)
 
     # --- psync accounting --------------------------------------------------
     new_psync = count                                        # FLUSH_INSERT / PNode.create
@@ -294,16 +340,19 @@ def _insert_impl(state: SetState, keys: jax.Array, values: jax.Array, *,
     ok = win
     return SetState(
         keys=keys_a, values=vals_a, cur=cur, flushed=flushed, table=table,
+        bkeys=bkeys, bids=bids, skeys=skeys, sids=sids, stash_n=stash_n,
         n_psync=_bump(state.n_psync, new_psync),
         n_ops=_bump(state.n_ops, jnp.sum(active.astype(jnp.int32))),
         size=state.size + count,
-        overflow=state.overflow | ovf | tovf,
+        overflow=state.overflow | ovf | tovf | iovf,
     ), ok
 
 
 def _remove_impl(state: SetState, keys: jax.Array, *, mode: str,
                  lookup_fn: LookupFn, active: Optional[jax.Array] = None,
-                 max_probe: int = MAX_PROBE) -> Tuple[SetState, jax.Array]:
+                 max_probe: int = MAX_PROBE,
+                 index_remove: Optional[IndexUpdateFn] = None,
+                 maintain_table: bool = True) -> Tuple[SetState, jax.Array]:
     assert mode in MODES
     b = keys.shape[0]
     if active is None:
@@ -322,7 +371,16 @@ def _remove_impl(state: SetState, keys: jax.Array, *, mode: str,
     cur = jnp.where(mark, DELETED, state.cur)
     flushed = jnp.where(mark, DELETED, state.flushed)
 
-    table = _table_delete(state.table, keys, existing, win, max_probe)
+    if maintain_table:
+        table = _table_delete(state.table, keys, existing, win, max_probe)
+    else:
+        table = state.table
+
+    bkeys, bids, skeys, sids, stash_n = (state.bkeys, state.bids, state.skeys,
+                                         state.sids, state.stash_n)
+    if index_remove is not None:
+        bkeys, bids, skeys, sids, stash_n, _ = index_remove(
+            bkeys, bids, skeys, sids, stash_n, keys, existing, win)
 
     count = jnp.sum(win.astype(jnp.int32))
     new_psync = count                                        # FLUSH_DELETE / PNode.destroy
@@ -334,6 +392,7 @@ def _remove_impl(state: SetState, keys: jax.Array, *, mode: str,
     return SetState(
         keys=state.keys, values=state.values, cur=cur, flushed=flushed,
         table=table,
+        bkeys=bkeys, bids=bids, skeys=skeys, sids=sids, stash_n=stash_n,
         n_psync=_bump(state.n_psync, new_psync),
         n_ops=_bump(state.n_ops, jnp.sum(active.astype(jnp.int32))),
         size=state.size - count,
@@ -423,12 +482,20 @@ def crash(state: SetState, u: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Arra
 
 def _rebuild_from_member(member: jax.Array, keys: jax.Array,
                          values: jax.Array, table_factor: int = 4,
-                         max_probe: int = MAX_PROBE) -> SetState:
+                         max_probe: int = MAX_PROBE, n_buckets: int = 0,
+                         bucket_width: int = 0, stash_size: int = 0,
+                         build_table: bool = True,
+                         index_init: Optional[Callable[[SetState], SetState]]
+                         = None) -> SetState:
     """Shared recovery rebuild: member mask -> fresh SetState (free list +
-    probe-table reconstruction).  Used by both the legacy recover() and the
-    engine's backend-aware recover."""
+    volatile-index reconstruction).  Used by both the legacy recover() and
+    the engine's backend-aware recover.  ``index_init`` is the backend's
+    bulk index build (``build_buckets`` for the bucket backend) -- the ONLY
+    place outside state construction where the bucket index is built from
+    scratch; ``build_table`` is False for backends that never read the
+    linear-probe table."""
     n = keys.shape[0]
-    state = make_state(n, table_factor)
+    state = make_state(n, table_factor, n_buckets, bucket_width, stash_size)
     cur = jnp.where(member, VALID, FREE)
     state = state._replace(
         keys=jnp.where(member, keys, 0),
@@ -436,9 +503,14 @@ def _rebuild_from_member(member: jax.Array, keys: jax.Array,
         cur=cur, flushed=cur,
         size=jnp.sum(member.astype(jnp.int32)),
     )
-    ids = jnp.arange(n, dtype=jnp.int32)
-    table, ovf = _table_write(state.table, state.keys, ids, member, max_probe)
-    return state._replace(table=table, overflow=state.overflow | ovf)
+    if build_table:
+        ids = jnp.arange(n, dtype=jnp.int32)
+        table, ovf = _table_write(state.table, state.keys, ids, member,
+                                  max_probe)
+        state = state._replace(table=table, overflow=state.overflow | ovf)
+    if index_init is not None:
+        state = index_init(state)
+    return state
 
 
 @functools.partial(jax.jit, static_argnames=("table_factor",))

@@ -9,12 +9,15 @@ call:
   probe    vectorized linear-probe hash lookup over ``SetState.table``
            (the default; pure lax, models the paper's hash-table runs)
   scan     O(N) traversal lookup (models the paper's linked-list runs)
-  bucket   set-associative (NB buckets x W ways) lookup executed by the
-           Pallas MXU kernel ``hash_probe.probe_pallas``; recovery runs the
-           streaming Pallas kernel ``recovery_scan.scan_pallas``.  Live
-           nodes that overflow a bucket land in an exact dense stash that
-           the lookup falls back to, so the backend is correct at any load
-           factor.
+  bucket   set-associative (NB buckets x W ways) index carried in
+           ``SetState`` (DESIGN.md §5): built once at make_state/recovery,
+           updated incrementally by the op bodies (O(B*W) scatter), and
+           probed by the Pallas MXU kernel ``hash_probe.probe_pallas``;
+           recovery runs the streaming Pallas kernel
+           ``recovery_scan.scan_pallas``.  Live nodes that overflow a
+           bucket land in an exact dense stash the lookup falls back to
+           (gated on the stash-occupancy latch), so the backend is correct
+           at any load factor.
 
 Everything is configured by one frozen, hashable :class:`SetSpec` (capacity,
 algorithm mode, backend, table/bucket geometry, pallas-interpret flag) that
@@ -34,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import warnings
-from typing import Callable, Dict, Protocol, Tuple
+from typing import Dict, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +46,6 @@ from jax import lax
 
 from repro.core import durable_set as DS
 from repro.core.durable_set import SetState, MODES
-from repro.core.nvm import VALID
 from repro.kernels.hash_probe import ops as hp_ops
 from repro.kernels.recovery_scan import ops as rs_ops
 
@@ -66,6 +68,9 @@ class SetSpec:
     n_buckets     bucket backend: bucket count NB (0 => derived so the
                   table holds 2x capacity at width w: next pow2 of 2N/W)
     bucket_width  bucket backend: ways per bucket W
+    stash_size    bucket backend: dense-stash slots S for per-bucket
+                  overflow spill (overflowing past S latches
+                  ``state.overflow``)
     use_pallas    bucket backend: run the Pallas kernels (else jnp refs)
     interpret     pallas_call interpret mode (True for CPU / debugging)
     """
@@ -76,6 +81,7 @@ class SetSpec:
     max_probe: int = 128
     n_buckets: int = 0
     bucket_width: int = 8
+    stash_size: int = 128
     use_pallas: bool = True
     interpret: bool = True
 
@@ -84,7 +90,7 @@ class SetSpec:
             raise ValueError(f"capacity must be positive, got {self.capacity}")
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
-        for f in ("table_factor", "max_probe", "bucket_width"):
+        for f in ("table_factor", "max_probe", "bucket_width", "stash_size"):
             if getattr(self, f) < 1:
                 raise ValueError(f"{f} must be >= 1")
         if self.n_buckets < 0 or (self.n_buckets &
@@ -107,10 +113,14 @@ class SetSpec:
 
 class IndexBackend(Protocol):
     """A volatile-index backend: lookup on the hot path, validity
-    classification on the recovery path.  Register with
-    :func:`register_backend`; implementations must be pure/jittable with
-    ``spec`` static."""
+    classification on the recovery path, plus the index-lifecycle hooks of
+    DESIGN.md §5 (state geometry, bulk build, incremental maintenance).
+    Register with :func:`register_backend`; implementations must be
+    pure/jittable with ``spec`` static."""
     name: str
+    # False => the op bodies skip linear-probe-table maintenance entirely
+    # (the backend's lookups never read ``SetState.table``).
+    needs_probe_table: bool
 
     def lookup(self, spec: SetSpec, state: SetState,
                keys: jax.Array) -> jax.Array:
@@ -122,10 +132,40 @@ class IndexBackend(Protocol):
         """persisted stages i32[N] -> (member mask bool[N], stage hist i32[5])."""
         ...
 
+    def state_geometry(self, spec: SetSpec) -> Tuple[int, int, int]:
+        """(n_buckets, bucket_width, stash_size) sizing the SetState bucket
+        fields -- (0, 0, 0) for backends that do not carry a bucket index."""
+        ...
 
-class ProbeBackend:
+    def init_index(self, spec: SetSpec, state: SetState) -> SetState:
+        """Bulk-build the backend's index fields from the node pool (state
+        construction / recovery only -- never the hot path)."""
+        ...
+
+    def update_index(self, spec: SetSpec, phase: str
+                     ) -> Optional[DS.IndexUpdateFn]:
+        """Incremental maintenance hook for ``phase`` ("insert"|"remove"),
+        or None when the op bodies should leave the bucket fields alone."""
+        ...
+
+
+class _NullIndexMixin:
+    """Lifecycle defaults for backends without a carried bucket index."""
+
+    def state_geometry(self, spec):
+        return (0, 0, 0)
+
+    def init_index(self, spec, state):
+        return state
+
+    def update_index(self, spec, phase):
+        return None
+
+
+class ProbeBackend(_NullIndexMixin):
     """The paper's hash-set experiments: linear probing over SetState.table."""
     name = "probe"
+    needs_probe_table = True
 
     def lookup(self, spec, state, keys):
         return DS._lookup_probe(state, keys, max_probe=spec.max_probe)
@@ -134,9 +174,10 @@ class ProbeBackend:
         return rs_ops.recovery_scan(persisted, use_pallas=False)
 
 
-class ScanBackend:
+class ScanBackend(_NullIndexMixin):
     """The paper's list experiments: cost dominated by full traversal."""
     name = "scan"
+    needs_probe_table = False      # _lookup_scan reads cur/keys directly
 
     def lookup(self, spec, state, keys):
         return DS._lookup_scan(state, keys)
@@ -146,42 +187,57 @@ class ScanBackend:
 
 
 class BucketBackend:
-    """Set-associative index probed by the Pallas MXU kernel.
+    """Set-associative index carried in SetState, probed by the Pallas MXU
+    kernel.
 
-    ``build_buckets`` packs live nodes into an (NB, W) table; queries go
-    through ``hash_probe.ops.lookup`` (probe_pallas when use_pallas).  Live
-    nodes that overflow their bucket (load factor > W per bucket) are
-    recovered exactly via a dense stash scan, taken only when the build
-    reports overflow.  Recovery classification runs the streaming
-    ``recovery_scan`` Pallas kernel.
+    Lifecycle (DESIGN.md §5): ``bucket_init`` bulk-packs live nodes into
+    ``state.bkeys``/``state.bids`` at state construction and recovery;
+    during operation ``bucket_insert``/``bucket_remove`` maintain the table
+    with O(B*W) scatter writes (claim the first free way, free the way on
+    delete, spill to the dense ``skeys``/``sids`` stash on per-bucket
+    overflow).  Lookups
+    are pure reads: ``hp_ops.lookup`` (probe_pallas when use_pallas) over
+    the carried table, with an O(B*S) dense-stash fallback gated on the
+    ``stash_n`` occupancy latch.  Recovery classification runs the
+    streaming ``recovery_scan`` Pallas kernel.
     """
     name = "bucket"
+    needs_probe_table = False
 
     def lookup(self, spec, state, keys):
-        nb, w = spec.bucket_geometry()
-        bkeys, bids, ovf = hp_ops.build_buckets(state.keys, state.cur,
-                                                nb=nb, w=w)
-        found = hp_ops.lookup(bkeys, bids, keys, use_pallas=spec.use_pallas,
+        found = hp_ops.lookup(state.bkeys, state.bids, keys,
+                              use_pallas=spec.use_pallas,
                               interpret=spec.interpret)
 
         def with_stash(f):
-            # only paid when the build reported spill (lax.cond branch)
-            n = state.keys.shape[0]
-            flat = bids.reshape(-1)
-            flat = jnp.where(flat >= 0, flat, n)      # -1 ways -> dropped
-            in_table = jnp.zeros((n,), jnp.bool_).at[flat].set(
-                True, mode="drop")
-            stash = (state.cur == VALID) & ~in_table
-            eq = stash[None, :] & (keys[:, None] == state.keys[None, :])
+            # only paid while the stash is occupied (lax.cond branch)
+            live = state.sids >= 0
+            eq = live[None, :] & (keys[:, None] == state.skeys[None, :])
             hit = eq.any(axis=1)
-            sid = jnp.argmax(eq, axis=1).astype(jnp.int32)
+            sid = state.sids[jnp.argmax(eq, axis=1).astype(jnp.int32)]
             return jnp.where((f < 0) & hit, sid, f)
 
-        return lax.cond(ovf > 0, with_stash, lambda f: f, found)
+        return lax.cond(state.stash_n > 0, with_stash, lambda f: f, found)
 
     def recover_scan(self, spec, persisted):
         return rs_ops.recovery_scan(persisted, use_pallas=spec.use_pallas,
                                     interpret=spec.interpret)
+
+    def state_geometry(self, spec):
+        nb, w = spec.bucket_geometry()
+        return nb, w, spec.stash_size
+
+    def init_index(self, spec, state):
+        nb, w = spec.bucket_geometry()
+        bkeys, bids, skeys, sids, stash_n, ovf = hp_ops.bucket_init(
+            state.keys, state.cur, nb=nb, w=w, s=spec.stash_size)
+        return state._replace(bkeys=bkeys, bids=bids, skeys=skeys, sids=sids,
+                              stash_n=stash_n,
+                              overflow=state.overflow | ovf)
+
+    def update_index(self, spec, phase):
+        return hp_ops.bucket_insert if phase == "insert" \
+            else hp_ops.bucket_remove
 
 
 BACKENDS: Dict[str, IndexBackend] = {}
@@ -212,31 +268,44 @@ def _lookup_fn(spec: SetSpec) -> DS.LookupFn:
 
 
 # ---------------------------------------------------------------------------
-# Functional API (spec-static jitted ops)
+# Functional API (spec-static jitted ops).  ``state`` is donated on every
+# entrypoint: the node-pool and bucket-table buffers are updated in place
+# (where the platform supports donation) instead of copied per dispatch, so
+# callers must rebind -- ``state, ok = insert(state, ...)``.
 # ---------------------------------------------------------------------------
 
 
 def make_state(spec: SetSpec) -> SetState:
-    return DS.make_state(spec.capacity, spec.table_factor)
+    """Fresh spec-shaped state.  The bucket index is born empty-canonical
+    (all ways EMPTY), which is exactly what ``init_index`` would build from
+    an empty pool -- the ONLY other bulk build happens at recovery."""
+    nb, w, s = get_backend(spec.backend).state_geometry(spec)
+    return DS.make_state(spec.capacity, spec.table_factor, nb, w, s)
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
 def insert(state: SetState, keys: jax.Array, values: jax.Array, *,
            spec: SetSpec) -> Tuple[SetState, jax.Array]:
+    backend = get_backend(spec.backend)
     return DS._insert_impl(state, keys, values, mode=spec.mode,
                            lookup_fn=_lookup_fn(spec),
+                           index_insert=backend.update_index(spec, "insert"),
+                           maintain_table=backend.needs_probe_table,
                            max_probe=spec.max_probe)
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
 def remove(state: SetState, keys: jax.Array, *,
            spec: SetSpec) -> Tuple[SetState, jax.Array]:
+    backend = get_backend(spec.backend)
     return DS._remove_impl(state, keys, mode=spec.mode,
                            lookup_fn=_lookup_fn(spec),
+                           index_remove=backend.update_index(spec, "remove"),
+                           maintain_table=backend.needs_probe_table,
                            max_probe=spec.max_probe)
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
 def contains(state: SetState, keys: jax.Array, *,
              spec: SetSpec) -> Tuple[SetState, jax.Array]:
     state, present, _ = DS._contains_impl(state, keys, mode=spec.mode,
@@ -244,7 +313,7 @@ def contains(state: SetState, keys: jax.Array, *,
     return state, present
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
 def get(state: SetState, keys: jax.Array, *, spec: SetSpec,
         default: int = 0) -> Tuple[SetState, jax.Array, jax.Array]:
     """Value lookup: (state, values-or-default, present).  Read-path psync
@@ -256,7 +325,7 @@ def get(state: SetState, keys: jax.Array, *, spec: SetSpec,
     return state, vals, present
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
 def apply_batch(state: SetState, ops: jax.Array, keys: jax.Array,
                 values: jax.Array, *, spec: SetSpec
                 ) -> Tuple[SetState, jax.Array]:
@@ -269,7 +338,9 @@ def apply_batch(state: SetState, ops: jax.Array, keys: jax.Array,
     batch), with lane priority inside each phase.  Returns success/presence
     per lane.
     """
+    backend = get_backend(spec.backend)
     lookup_fn = _lookup_fn(spec)
+    mt = backend.needs_probe_table
     is_c = ops == OP_CONTAINS
     is_i = ops == OP_INSERT
     is_r = ops == OP_REMOVE
@@ -277,12 +348,14 @@ def apply_batch(state: SetState, ops: jax.Array, keys: jax.Array,
                                         lookup_fn=lookup_fn, active=is_c)
     # the contains phase only touches flushed/psync accounting, never the
     # index fields, so its lookup is still valid for the insert phase
-    state, r_i = DS._insert_impl(state, keys, values, mode=spec.mode,
-                                 lookup_fn=lookup_fn, active=is_i,
-                                 max_probe=spec.max_probe, existing=ids)
-    state, r_r = DS._remove_impl(state, keys, mode=spec.mode,
-                                 lookup_fn=lookup_fn, active=is_r,
-                                 max_probe=spec.max_probe)
+    state, r_i = DS._insert_impl(
+        state, keys, values, mode=spec.mode, lookup_fn=lookup_fn,
+        active=is_i, max_probe=spec.max_probe, existing=ids,
+        index_insert=backend.update_index(spec, "insert"), maintain_table=mt)
+    state, r_r = DS._remove_impl(
+        state, keys, mode=spec.mode, lookup_fn=lookup_fn, active=is_r,
+        max_probe=spec.max_probe,
+        index_remove=backend.update_index(spec, "remove"), maintain_table=mt)
     return state, jnp.where(is_i, r_i, jnp.where(is_r, r_r, r_c))
 
 
@@ -291,13 +364,19 @@ def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array, *,
             spec: SetSpec) -> Tuple[SetState, jax.Array]:
     """Rebuild from the durable areas (Sections 3.5 / 4.6) through the
     spec's backend: classification via backend.recover_scan (the Pallas
-    recovery_scan kernel for the bucket backend), then index rebuild.
+    recovery_scan kernel for the bucket backend), then index rebuild --
+    the one place besides state construction where the bucket index is
+    bulk-built (``build_buckets`` via backend.init_index).
     Returns (state, stage histogram i32[5]) -- the recovery telemetry.
     No psync is ever issued: payloads are already durable."""
     backend = get_backend(spec.backend)
     member, hist = backend.recover_scan(spec, persisted)
-    state = DS._rebuild_from_member(member, keys, values, spec.table_factor,
-                                    spec.max_probe)
+    nb, w, s = backend.state_geometry(spec)
+    state = DS._rebuild_from_member(
+        member, keys, values, spec.table_factor, spec.max_probe,
+        n_buckets=nb, bucket_width=w, stash_size=s,
+        build_table=backend.needs_probe_table,
+        index_init=functools.partial(backend.init_index, spec))
     return state, hist
 
 
@@ -320,7 +399,7 @@ class DurableMap:
     >>> m.crash_and_recover()       # volatile index lost + rebuilt
     """
 
-    def __init__(self, spec: SetSpec = None, **spec_kwargs):
+    def __init__(self, spec: Optional[SetSpec] = None, **spec_kwargs):
         if spec is None:
             spec = SetSpec(**spec_kwargs)
         elif spec_kwargs:

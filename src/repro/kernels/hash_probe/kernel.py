@@ -12,9 +12,10 @@ Tiling: grid (B / BQ, NB / NBT).  Each program holds a (BQ, NBT) one-hot in
 VMEM, gathers the key-half and id planes for its bucket tile, and folds the
 match into the output with a running max (ids are unique, empty == -1, so
 max over tiles is the join).  VMEM per program:
-  onehot BQ*NBT*4 + 3 planes NBT*W*4 + out BQ*4  ~= 128*512*4*2 = 512 KiB
-with the default BQ=128, NBT=512, W=8 -- comfortably under 16 MiB and MXU
-dims (128 x 512 @ 512 x 8) are lane-aligned.
+  onehot BQ*NBT*4 + 3 planes NBT*W*4 + out BQ*4  ~= 2.5 MiB
+at BQ=128, NBT=4096, W=8 (the largest tile the ops wrapper picks --
+fewer grid steps amortize per-program overhead) -- comfortably under
+16 MiB, and MXU dims (128 x NBT @ NBT x 8) stay lane-aligned.
 """
 from __future__ import annotations
 
@@ -69,7 +70,8 @@ def probe_pallas(bucket_keys: jax.Array, bucket_ids: jax.Array,
     nb, w = bucket_keys.shape
     b = q_keys.shape[0]
     assert nb % nbt == 0 and b % bq == 0, (nb, nbt, b, bq)
-    assert int(nb) * 1 < (1 << 24), "bucket count exceeds f32-exact id budget"
+    # f32 exactness requires every id+1 < 2^24; the table builders
+    # (build_buckets / bucket_init) and SetSpec enforce pool size < 2^24.
 
     khi = (bucket_keys.view(jnp.uint32) >> 16).astype(jnp.int32)
     klo = (bucket_keys.view(jnp.uint32) & jnp.uint32(0xFFFF)).astype(jnp.int32)

@@ -1,12 +1,28 @@
-"""Jit'd wrapper tying the probe kernel to the durable-set state."""
+"""Jit'd wrappers tying the probe kernel to the durable-set state.
+
+Two regimes (DESIGN.md §5):
+
+  bulk         ``build_buckets`` / ``bucket_init`` pack the whole node pool
+               into the (NB, W) table -- an O(N log N) argsort repack paid
+               ONLY at state construction and recovery.
+  incremental  ``bucket_insert`` / ``bucket_remove`` maintain the same table
+               with O(B*W) per-lane scatter writes -- the hot path.  A lane
+               claims the first free way of its bucket, spills to the dense
+               stash on per-bucket overflow, and frees the way (or stash
+               slot) on delete.
+
+``lookup`` is then a pure read of the carried table through the Pallas MXU
+kernel ``probe_pallas`` (or the jnp reference).
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
-from repro.core.nvm import hash32, VALID
+from repro.core.nvm import hash32, EMPTY, VALID
 from repro.kernels.hash_probe.kernel import probe_pallas
 from repro.kernels.hash_probe.ref import probe_ref
 
@@ -19,6 +35,7 @@ def build_buckets(keys: jax.Array, cur: jax.Array, nb: int = 1024, w: int = 8):
     nodes (computed with a sort), overflowing entries dropped into the dense
     stash handled by the wrapper (rare under load factor <= 0.5)."""
     n = keys.shape[0]
+    assert n < (1 << 24), "pool size exceeds the f32-exact node-id budget"
     live = cur == VALID
     bucket = (hash32(keys) % jnp.uint32(nb)).astype(jnp.int32)
     bucket = jnp.where(live, bucket, nb)          # dead nodes -> overflow bin
@@ -26,9 +43,6 @@ def build_buckets(keys: jax.Array, cur: jax.Array, nb: int = 1024, w: int = 8):
     sorted_b = bucket[order]
     # rank within bucket group
     idx = jnp.arange(n, dtype=jnp.int32)
-    first_of_group = jnp.concatenate([jnp.array([0], jnp.int32),
-                                      jnp.cumsum((sorted_b[1:] != sorted_b[:-1])
-                                                 .astype(jnp.int32))])
     group_start = jnp.full((nb + 1,), n, jnp.int32).at[sorted_b].min(
         idx, mode="drop")
     rank = idx - group_start[jnp.clip(sorted_b, 0, nb)]
@@ -42,6 +56,87 @@ def build_buckets(keys: jax.Array, cur: jax.Array, nb: int = 1024, w: int = 8):
     return bkeys, bids, overflow
 
 
+@functools.partial(jax.jit, static_argnames=("nb", "w", "s"))
+def bucket_init(keys: jax.Array, cur: jax.Array, *, nb: int, w: int, s: int):
+    """Bulk build of the full incremental index: (NB, W) bucket table plus
+    the dense stash holding the live nodes that overflowed their bucket.
+    Returns (bkeys, bids, skeys, sids, stash_n, overflow) -- overflow is
+    True when more than ``s`` nodes spilled (data would be unreachable)."""
+    bkeys, bids, _ = build_buckets(keys, cur, nb=nb, w=w)
+    n = keys.shape[0]
+    flat = bids.reshape(-1)
+    in_table = jnp.zeros((n,), jnp.bool_).at[
+        jnp.where(flat >= 0, flat, n)].set(True, mode="drop")
+    stashed = (cur == VALID) & ~in_table
+    spill = jnp.sum(stashed.astype(jnp.int32))
+    idx = jnp.where(stashed, size=s, fill_value=-1)[0].astype(jnp.int32)
+    got = idx >= 0
+    sids = jnp.where(got, idx, EMPTY)
+    skeys = jnp.where(got, keys[jnp.clip(idx, 0)], 0)
+    return bkeys, bids, skeys, sids, jnp.minimum(spill, s), spill > s
+
+
+def bucket_insert(bkeys, bids, skeys, sids, stash_n, keys, ids, do):
+    """Incremental insert: for lanes with do[i], place node ids[i] (key
+    keys[i]) into the first free way of its bucket, or the first free dense
+    stash slot when the bucket is full.  The fori_loop over lanes is the
+    linearization order, exactly as in ``_table_write``.  O(B*W + B*S)."""
+    nb, _ = bkeys.shape
+    bucket = (hash32(keys) % jnp.uint32(nb)).astype(jnp.int32)
+    b = keys.shape[0]
+
+    def lane(i, carry):
+        bkeys, bids, skeys, sids, stash_n, ovf = carry
+        bi = bucket[i]
+        freeway = bids[bi] == EMPTY
+        has_way = freeway.any()
+        way = jnp.argmax(freeway).astype(jnp.int32)
+        place = do[i] & has_way
+        bkeys = bkeys.at[bi, way].set(
+            jnp.where(place, keys[i], bkeys[bi, way]))
+        bids = bids.at[bi, way].set(jnp.where(place, ids[i], bids[bi, way]))
+        freeslot = sids == EMPTY
+        has_slot = freeslot.any()
+        slot = jnp.argmax(freeslot).astype(jnp.int32)
+        spill = do[i] & ~has_way
+        put = spill & has_slot
+        skeys = skeys.at[slot].set(jnp.where(put, keys[i], skeys[slot]))
+        sids = sids.at[slot].set(jnp.where(put, ids[i], sids[slot]))
+        stash_n = stash_n + put.astype(jnp.int32)
+        return bkeys, bids, skeys, sids, stash_n, ovf | (spill & ~has_slot)
+
+    return lax.fori_loop(0, b, lane, (bkeys, bids, skeys, sids, stash_n,
+                                      jnp.bool_(False)))
+
+
+def bucket_remove(bkeys, bids, skeys, sids, stash_n, keys, ids, do):
+    """Incremental delete: free the way (or dense stash slot) holding node
+    ids[i] for lanes with do[i].  A live node is in the bucket table XOR
+    the stash, so exactly one of the two clears fires.  O(B*W + B*S)."""
+    nb, _ = bkeys.shape
+    bucket = (hash32(keys) % jnp.uint32(nb)).astype(jnp.int32)
+    b = keys.shape[0]
+
+    def lane(i, carry):
+        bkeys, bids, skeys, sids, stash_n, ovf = carry
+        bi = bucket[i]
+        hitw = bids[bi] == ids[i]
+        in_table = do[i] & hitw.any()
+        way = jnp.argmax(hitw).astype(jnp.int32)
+        bids = bids.at[bi, way].set(jnp.where(in_table, EMPTY, bids[bi, way]))
+        bkeys = bkeys.at[bi, way].set(jnp.where(in_table, 0, bkeys[bi, way]))
+        hits = sids == ids[i]
+        in_stash = do[i] & ~in_table & hits.any()
+        slot = jnp.argmax(hits).astype(jnp.int32)
+        sids = sids.at[slot].set(jnp.where(in_stash, EMPTY, sids[slot]))
+        skeys = skeys.at[slot].set(jnp.where(in_stash, 0, skeys[slot]))
+        stash_n = stash_n - in_stash.astype(jnp.int32)
+        return bkeys, bids, skeys, sids, stash_n, ovf
+
+    return lax.fori_loop(0, b, lane, (bkeys, bids, skeys, sids, stash_n,
+                                      jnp.bool_(False)))
+
+
 def lookup(bucket_keys, bucket_ids, q_keys, *, use_pallas=True,
            interpret=True):
     nb = bucket_keys.shape[0]
@@ -49,7 +144,9 @@ def lookup(bucket_keys, bucket_ids, q_keys, *, use_pallas=True,
     if use_pallas:
         b = q_keys.shape[0]
         bq = 128 if b % 128 == 0 else (8 if b % 8 == 0 else 1)
-        nbt = min(512, nb)
+        # Largest lane-aligned bucket tile that fits VMEM (~2.5 MiB at
+        # NBT=4096, W=8): fewer grid steps amortize per-program overhead.
+        nbt = min(4096, nb)
         return probe_pallas(bucket_keys, bucket_ids, qb, q_keys,
                             bq=bq, nbt=nbt, interpret=interpret)
     return probe_ref(bucket_keys, bucket_ids, qb, q_keys)

@@ -1,0 +1,190 @@
+"""Incremental bucket-index tests (DESIGN.md §5).
+
+The (NB, W) bucket table + dense stash carried in SetState is updated in
+place by the op bodies; these tests pin down the two properties that make
+that safe:
+
+  1. observational equivalence -- after ANY mixed apply_batch sequence
+     (including bucket overflow -> stash spill and node-slot reuse after
+     remove), lookups through the incremental index agree with (a) ground
+     truth membership from the node pool and (b) a from-scratch
+     ``bucket_init`` bulk build of the same pool;
+  2. structural invariants -- every live node sits in the bucket table XOR
+     the stash, exactly once, under its own key and bucket, and ``stash_n``
+     matches the stash occupancy;
+
+plus the lifecycle guarantee: ``build_buckets`` (the O(N log N) bulk
+repack) runs ONLY at state init / recovery, never on the lookup or
+apply_batch hot path.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.kernels.hash_probe.ops as hp_ops
+from repro.core import DurableMap, SetSpec, VALID, get_backend
+from repro.core.nvm import np_hash32
+
+SPEC = dict(capacity=64, mode="soft", backend="bucket",
+            n_buckets=8, bucket_width=2, stash_size=32)
+
+
+def _check_invariants(m: DurableMap):
+    st = m.state
+    n = st.keys.shape[0]
+    nb, w = st.bids.shape
+    keys = np.array(st.keys)
+    live = np.array(st.cur) == VALID
+    bids = np.array(st.bids)
+    bkeys = np.array(st.bkeys)
+    sids = np.array(st.sids)
+    skeys = np.array(st.skeys)
+
+    in_table = np.zeros(n, bool)
+    for b in range(nb):
+        for way in range(w):
+            i = bids[b, way]
+            if i < 0:
+                continue
+            assert not in_table[i], f"node {i} twice in bucket table"
+            in_table[i] = True
+            assert bkeys[b, way] == keys[i], "way key != node key"
+            assert int(np_hash32(np.array([keys[i]]))[0] % nb) == b, \
+                "node filed under the wrong bucket"
+    in_stash = np.zeros(n, bool)
+    for s, i in enumerate(sids):
+        if i < 0:
+            continue
+        assert not in_stash[i], f"node {i} twice in stash"
+        in_stash[i] = True
+        assert skeys[s] == keys[i], "stash key != node key"
+    assert int(st.stash_n) == in_stash.sum(), "stash_n != stash occupancy"
+    assert not (in_table & in_stash).any(), "node in table AND stash"
+    np.testing.assert_array_equal(in_table | in_stash, live,
+                                  "live nodes != table ∪ stash")
+
+
+def _fresh_build_lookup(m: DurableMap, queries: np.ndarray) -> np.ndarray:
+    """Resolve queries through a from-scratch bulk build of the same pool."""
+    spec = m.spec
+    nb, w = spec.bucket_geometry()
+    bkeys, bids, skeys, sids, stash_n, ovf = hp_ops.bucket_init(
+        m.state.keys, m.state.cur, nb=nb, w=w, s=spec.stash_size)
+    assert not bool(ovf)
+    q = jnp.asarray(queries, jnp.int32)
+    found = np.array(hp_ops.lookup(bkeys, bids, q, use_pallas=False))
+    sids, skeys = np.array(sids), np.array(skeys)
+    for i, k in enumerate(queries):
+        if found[i] < 0:
+            hit = np.flatnonzero((sids >= 0) & (skeys == k))
+            if hit.size:
+                found[i] = sids[hit[0]]
+    return found
+
+
+@pytest.mark.parametrize("mode", ("soft", "linkfree"))
+@pytest.mark.parametrize("seed", (0, 1, 2))
+def test_incremental_index_equivalent_to_bulk_build(seed, mode):
+    rng = np.random.default_rng(seed)
+    m = DurableMap(SetSpec(**{**SPEC, "mode": mode}))
+    universe = np.arange(48, dtype=np.int32)
+    member = set()
+    inserted = 0
+    for _ in range(40):
+        ops = rng.integers(0, 3, 16).astype(np.int32)
+        keys = rng.choice(universe, 16).astype(np.int32)
+        m.apply(ops, keys, keys * 3)
+        # python oracle of the phase linearization (contains < ins < rem)
+        for o, k in zip(ops, keys):
+            if o == 1 and int(k) not in member:
+                member.add(int(k))
+                inserted += 1
+        for o, k in zip(ops, keys):
+            if o == 2:
+                member.discard(int(k))
+
+        _check_invariants(m)
+        got = np.array(m.contains(universe))
+        assert {int(k) for k in universe[got]} == member
+        # incremental index resolves every key to the same node a
+        # from-scratch build_buckets repack of the pool would (node ids are
+        # unique per live key, so the resolved ids must match exactly)
+        fresh = _fresh_build_lookup(m, universe)
+        eng = np.array(get_backend("bucket").lookup(
+            m.spec, m.state, jnp.asarray(universe)))
+        np.testing.assert_array_equal(eng, fresh)
+    assert not bool(m.state.overflow)
+    assert inserted > m.spec.capacity, \
+        "workload too small to exercise node-slot reuse after remove"
+
+
+def test_stash_spill_and_drain():
+    """Force per-bucket overflow, then drain the stash through removes."""
+    nb = SPEC["n_buckets"]
+    colliding, k = [], 1
+    while len(colliding) < 6:
+        if int(np_hash32(np.array([k]))[0] % nb) == 0:
+            colliding.append(k)
+        k += 1
+    colliding = np.array(colliding, np.int32)
+    m = DurableMap(SetSpec(**SPEC))
+    assert np.array(m.insert(colliding, colliding)).all()
+    _check_invariants(m)
+    assert int(m.state.stash_n) == 4          # W=2 fit, 4 spilled
+    assert np.array(m.contains(colliding)).all()
+    # removing stashed keys drains the latch; table keys keep their ways
+    assert np.array(m.remove(colliding[2:])).all()
+    _check_invariants(m)
+    assert int(m.state.stash_n) == 0
+    got = np.array(m.contains(colliding))
+    assert got[:2].all() and not got[2:].any()
+    # a fresh insert reuses the freed ways, not the stash
+    m.insert(colliding[2:4], colliding[2:4])
+    _check_invariants(m)
+    assert int(m.state.stash_n) == 2          # bucket full again -> 2 spill
+
+
+def test_stash_overflow_latches_state_overflow():
+    spec = SetSpec(capacity=64, mode="soft", backend="bucket",
+                   n_buckets=8, bucket_width=2, stash_size=2)
+    nb = 8
+    colliding, k = [], 1
+    while len(colliding) < 6:
+        if int(np_hash32(np.array([k]))[0] % nb) == 0:
+            colliding.append(k)
+        k += 1
+    m = DurableMap(spec)
+    m.insert(np.array(colliding, np.int32))
+    assert bool(m.state.overflow), \
+        "spilling past stash_size must latch state.overflow"
+
+
+def test_build_buckets_only_on_init_and_recovery(monkeypatch):
+    """The acceptance gate: the O(N log N) bulk repack must be gone from
+    every lookup / apply_batch path and survive only in recovery."""
+    calls = {"n": 0}
+    real = hp_ops.build_buckets
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(hp_ops, "build_buckets", counting)
+    # unique capacity => unique SetSpec => fresh jit traces see the wrapper
+    m = DurableMap(SetSpec(capacity=133, mode="soft", backend="bucket"))
+    m.insert(np.arange(20))
+    m.contains(np.arange(30))
+    m.get(np.arange(10))
+    m.remove(np.arange(0, 20, 2))
+    m.apply(np.array([0, 1, 2, 0], np.int32),
+            np.array([1, 99, 3, 99], np.int32))
+    assert calls["n"] == 0, \
+        "build_buckets reached a lookup/apply_batch hot path"
+    m.crash_and_recover()
+    assert calls["n"] >= 1, "recovery must bulk-rebuild via build_buckets"
+    # membership after recovery: odds survive except the 3 removed by the
+    # apply batch (evens removed earlier), 99 inserted
+    got = np.array(m.contains(np.arange(20)))
+    expect = {k for k in range(20) if k % 2 and k != 3}
+    assert {k for k in range(20) if got[k]} == expect
+    assert np.array(m.contains([99]))[0]
