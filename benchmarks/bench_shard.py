@@ -1,0 +1,88 @@
+"""Sharded-runtime benchmark with machine-readable output.
+
+Runs the canonical mixed workload (capacity 65536, key range 65536, batch
+1024, 90% reads -- the same acceptance point ``bench_hash`` tracks) through
+the bucket backend (the Pallas production path) at EQUAL TOTAL CAPACITY in
+three configurations per psync mode:
+
+  flat   the unsharded ``DurableMap`` engine path (``run_workload``)
+  s1     ``ShardedDurableMap`` with a single shard (router + vmap overhead)
+  s8     8 shards, one routed vmapped dispatch per round
+
+and writes ``BENCH_shard.json`` (uploaded as a CI artifact alongside
+``BENCH_hash.json``).  The headline acceptance quantity is the recorded
+``speedup.s8_vs_s1`` / ``speedup.s8_vs_flat`` of the soft mode: the S=8
+vmapped dispatch must sustain >= 2x the single-shard ops/sec.  The probe
+and scan backends run correctly under sharding (conformance battery) but
+their sequential probe/maintenance loops do not profit from the shard axis
+on CPU, so the tracked point is the bucket backend.
+
+``--quick`` KEEPS the canonical geometry -- sharding pays off at scale, so
+shrinking capacity/batch would measure fixed dispatch overhead instead of
+the acceptance point -- and trims rounds and the mode sweep (soft only).
+"""
+from __future__ import annotations
+
+import json
+import platform
+
+import jax
+
+from benchmarks.common import run_workload, run_sharded_workload, fmt_row
+
+MODES = ("soft", "linkfree", "logfree")
+BACKEND = "bucket"
+SHARDS = (1, 8)
+
+OUT = "BENCH_shard.json"
+
+
+def run(quick: bool = False, out: str = OUT):
+    cap, kr, batch, read_pct = 65536, 65536, 1024, 90   # the canonical point
+    rounds = 5 if quick else 10
+    modes = ("soft",) if quick else MODES
+    payload = {
+        "config": {"capacity": cap, "key_range": kr, "batch": batch,
+                   "read_pct": read_pct, "rounds": rounds, "quick": quick,
+                   "backend": BACKEND, "shards": list(SHARDS),
+                   "jax": jax.__version__,
+                   "device": jax.devices()[0].platform,
+                   "machine": platform.machine()},
+        "results": {},
+    }
+    rows = []
+    for mode in modes:
+        variants = {"flat": lambda m=mode: run_workload(
+            m, BACKEND, cap, kr, batch, read_pct, rounds=rounds)}
+        for s in SHARDS:
+            variants[f"s{s}"] = lambda m=mode, s=s: run_sharded_workload(
+                m, BACKEND, s, cap, kr, batch, read_pct, rounds=rounds)
+        for name, fn in variants.items():
+            r = fn()
+            payload["results"][f"{mode}_{BACKEND}_{name}"] = {
+                "ops_per_sec": r.ops_per_sec,
+                "psync_per_op": r.psync_per_op,
+                "psync_per_update": r.psync_per_update,
+            }
+            rows.append(fmt_row(f"bench_shard_{mode}_{BACKEND}_{name}", r,
+                                {"ops_per_sec": f"{r.ops_per_sec:.0f}"}))
+    res = payload["results"]
+    payload["speedup"] = {
+        "mode": "soft",
+        "s8_vs_s1": res[f"soft_{BACKEND}_s8"]["ops_per_sec"]
+        / res[f"soft_{BACKEND}_s1"]["ops_per_sec"],
+        "s8_vs_flat": res[f"soft_{BACKEND}_s8"]["ops_per_sec"]
+        / res[f"soft_{BACKEND}_flat"]["ops_per_sec"],
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    sp = payload["speedup"]
+    rows.append(f"bench_shard_json,0.000,path={out};"
+                f"s8_vs_s1={sp['s8_vs_s1']:.2f}x;"
+                f"s8_vs_flat={sp['s8_vs_flat']:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -24,7 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as E
+from repro.core import shard as SH
 from repro.core.engine import (SetSpec, OP_CONTAINS, OP_INSERT, OP_REMOVE)
+from repro.core.shard import ShardSpec
 
 
 @dataclass
@@ -33,6 +35,26 @@ class Result:
     psync_per_op: float
     psync_per_update: float
     rounds: int
+
+
+def _mixed_ops(batch: int, read_pct: int) -> jax.Array:
+    """The paper's Section 6 lane mix: reads, then 50-50 insert/remove."""
+    n_read = batch * read_pct // 100
+    n_ins = (batch - n_read) // 2
+    n_rem = batch - n_read - n_ins
+    return jnp.asarray(np.concatenate([
+        np.full(n_read, OP_CONTAINS), np.full(n_ins, OP_INSERT),
+        np.full(n_rem, OP_REMOVE)]).astype(np.int32))
+
+
+def _keysets(rng, key_range: int, batch: int, rounds: int):
+    """Pre-generate every per-round keyset on device BEFORE the timed loop:
+    host RNG + H2D transfer must not pollute the measured rounds."""
+    ks = [jax.device_put(jnp.asarray(
+        rng.integers(0, key_range, batch), jnp.int32))
+        for _ in range(rounds + 1)]
+    jax.block_until_ready(ks)
+    return ks
 
 
 def run_workload(mode: str, backend: str, capacity: int, key_range: int,
@@ -51,19 +73,9 @@ def run_workload(mode: str, backend: str, capacity: int, key_range: int,
             state, _ = E.insert(state, jnp.asarray(chunk),
                                 jnp.asarray(chunk), spec=spec)
 
-    n_read = batch * read_pct // 100
-    n_ins = (batch - n_read) // 2
-    n_rem = batch - n_read - n_ins
-    ops = jnp.asarray(np.concatenate([
-        np.full(n_read, OP_CONTAINS), np.full(n_ins, OP_INSERT),
-        np.full(n_rem, OP_REMOVE)]).astype(np.int32))
-
-    # Pre-generate every per-round keyset on device BEFORE the timed loop:
-    # host RNG + H2D transfer must not pollute the measured rounds.
-    keysets = [jax.device_put(jnp.asarray(
-        rng.integers(0, key_range, batch), jnp.int32))
-        for _ in range(rounds + 1)]
-    jax.block_until_ready(keysets)
+    ops = _mixed_ops(batch, read_pct)
+    n_upd = int(np.sum(np.asarray(ops) != OP_CONTAINS))
+    keysets = _keysets(rng, key_range, batch, rounds)
 
     # warm up compile; each round is ONE jitted mixed-batch dispatch
     k = keysets[0]
@@ -78,8 +90,53 @@ def run_workload(mode: str, backend: str, capacity: int, key_range: int,
     dt = time.perf_counter() - t0
     d_ops = int(state.n_ops) - o0
     d_psync = int(state.n_psync) - p0
-    updates = max((n_ins + n_rem) * rounds, 1)
+    updates = max(n_upd * rounds, 1)
     assert not bool(state.overflow), "capacity overflow in benchmark"
+    return Result(ops_per_sec=d_ops / dt,
+                  psync_per_op=d_psync / max(d_ops, 1),
+                  psync_per_update=d_psync / updates,
+                  rounds=rounds)
+
+
+def run_sharded_workload(mode: str, backend: str, n_shards: int,
+                         capacity: int, key_range: int, batch: int,
+                         read_pct: int, rounds: int = 30, seed: int = 0,
+                         prefill: bool = True) -> Result:
+    """The same mixed workload through :mod:`repro.core.shard`: one routed,
+    vmapped dispatch per round over ``n_shards`` shards at ``capacity``
+    TOTAL (equal-capacity comparison against :func:`run_workload`)."""
+    rng = np.random.default_rng(seed)
+    sspec = ShardSpec(base=SetSpec(capacity=capacity, mode=mode,
+                                   backend=backend), n_shards=n_shards)
+    state = SH.make_state(sspec)
+    if prefill:
+        keys = rng.choice(key_range, key_range // 2, replace=False)
+        for i in range(0, len(keys), batch):
+            chunk = np.resize(keys[i:i + batch], batch).astype(np.int32)
+            state, _, _ = SH.insert(state, jnp.asarray(chunk),
+                                    jnp.asarray(chunk), sspec=sspec)
+
+    ops = _mixed_ops(batch, read_pct)
+    n_upd = int(np.sum(np.asarray(ops) != OP_CONTAINS))
+    keysets = _keysets(rng, key_range, batch, rounds)
+
+    k = keysets[0]
+    state, _, _ = SH.apply_batch(state, ops, k, k, sspec=sspec)
+    jax.block_until_ready(state.keys)
+    p0 = int(state.n_psync.sum())
+    o0 = int(state.n_ops.sum())
+    drops = []
+    t0 = time.perf_counter()
+    for k in keysets[1:]:
+        state, _, dropped = SH.apply_batch(state, ops, k, k, sspec=sspec)
+        drops.append(dropped)          # device scalar; no sync until the end
+    jax.block_until_ready(state.keys)
+    dt = time.perf_counter() - t0
+    d_ops = int(state.n_ops.sum()) - o0
+    d_psync = int(state.n_psync.sum()) - p0
+    updates = max(n_upd * rounds, 1)
+    assert not bool(state.overflow.any()), "capacity overflow in benchmark"
+    assert sum(int(d) for d in drops) == 0, "router dropped lanes in benchmark"
     return Result(ops_per_sec=d_ops / dt,
                   psync_per_op=d_psync / max(d_ops, 1),
                   psync_per_update=d_psync / updates,

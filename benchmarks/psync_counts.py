@@ -25,7 +25,8 @@ def _bound_row(name: str, spec: SetSpec, n: int):
     state, _ = E.remove(state, keys, spec=spec)
     p_rem = int(state.n_psync) - p_ins - p_con
     dt = time.perf_counter() - t0
-    res = Result(ops_per_sec=3 * n / dt, psync_per_op=0,
+    res = Result(ops_per_sec=3 * n / dt,
+                 psync_per_op=(p_ins + p_con + p_rem) / (3 * n),
                  psync_per_update=(p_ins + p_rem) / (2 * n), rounds=1)
     return fmt_row(name, res, {
         "insert": f"{p_ins / n:.3f}", "contains": f"{p_con / n:.3f}",

@@ -1,10 +1,11 @@
 """Benchmark entry point: one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV.  --quick trims sizes for CI;
---backend swaps the hash-experiment index backend (probe | bucket) --
-"bucket" routes lookups through the Pallas hash_probe kernel.  The
-``bench_hash`` suite additionally writes ``BENCH_hash.json`` (ops/sec and
-psync/op per mode x backend at the canonical configuration) for
-cross-PR perf tracking; CI uploads it as an artifact."""
+--backend swaps the hash-experiment index backend (probe | scan | bucket)
+-- "bucket" routes lookups through the Pallas hash_probe kernel.  The
+``bench_hash`` / ``bench_shard`` suites additionally write
+``BENCH_hash.json`` / ``BENCH_shard.json`` (ops/sec and psync/op at the
+canonical configuration, the latter comparing flat vs S in {1, 8} shards)
+for cross-PR perf tracking; CI uploads both as artifacts."""
 import argparse
 import inspect
 import sys
@@ -16,16 +17,17 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
     ap.add_argument("--backend", default="probe",
-                    choices=("probe", "bucket"),
+                    choices=("probe", "scan", "bucket"),
                     help="index backend for the hash experiments")
     args = ap.parse_args()
 
     from benchmarks import (scalability, key_range, read_pct,
                             psync_counts, recovery, checkpoint_bench,
-                            bench_hash)
+                            bench_hash, bench_shard)
     suites = {
         "psync_counts": psync_counts,    # paper's analytical bound first
         "bench_hash": bench_hash,        # canonical point -> BENCH_hash.json
+        "bench_shard": bench_shard,      # sharded runtime -> BENCH_shard.json
         "scalability": scalability,      # Fig 1
         "key_range": key_range,          # Fig 2
         "read_pct": read_pct,            # Fig 3

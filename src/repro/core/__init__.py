@@ -10,5 +10,8 @@ from repro.core.durable_set import (SetState, make_state, insert_batch,
                                     recover, crash_and_recover, MODES)
 from repro.core.engine import (SetSpec, DurableMap, DurableSet, IndexBackend,
                                BACKENDS, register_backend, get_backend,
-                               apply_batch, OP_CONTAINS, OP_INSERT, OP_REMOVE)
+                               apply_batch, OP_CONTAINS, OP_INSERT,
+                               OP_REMOVE, OP_NOP)
+from repro.core.shard import (ShardSpec, ShardedDurableMap, shard_of,
+                              np_shard_of)
 from repro.core.oracle import OracleSet

@@ -231,16 +231,19 @@ def _alloc(state: SetState, need: jax.Array, count: jax.Array):
 
     Free slots are nodes at FREE or flushed-DELETED stage (the paper's ssmem
     free-list; a DELETED node may be reused only after its deletion psync,
-    which all three algorithms perform before returning).
+    which all three algorithms perform before returning).  The lane of
+    claim-rank r takes the (r+1)-th free slot in index order -- a binary
+    search over the free-mask cumsum (the dense nonzero formulation this
+    replaces dominated apply_batch on CPU).
     """
     free = (state.cur == FREE) | ((state.cur == DELETED) & (state.flushed == DELETED))
-    order = jnp.cumsum(free.astype(jnp.int32)) - 1   # rank among free slots
-    b = need.shape[0]
-    sel = free & (order < count)
-    slot_ids = jnp.where(sel, size=b, fill_value=-1)[0].astype(jnp.int32)
+    c = jnp.cumsum(free.astype(jnp.int32))
+    total = c[-1]
     rank = jnp.cumsum(need.astype(jnp.int32)) - 1    # lane -> slot rank
-    lane_slot = jnp.where(need, slot_ids[jnp.clip(rank, 0, b - 1)], -1)
-    ovf = (jnp.sum(free.astype(jnp.int32)) < count)
+    slot = jnp.searchsorted(c, rank + 1, side="left").astype(jnp.int32)
+    ok = need & (rank < total)
+    lane_slot = jnp.where(ok, slot, -1)
+    ovf = total < count
     return lane_slot, ovf
 
 

@@ -49,8 +49,10 @@ from repro.core.durable_set import SetState, MODES
 from repro.kernels.hash_probe import ops as hp_ops
 from repro.kernels.recovery_scan import ops as rs_ops
 
-# Mixed-batch op codes for apply_batch.
-OP_CONTAINS, OP_INSERT, OP_REMOVE = 0, 1, 2
+# Mixed-batch op codes for apply_batch.  OP_NOP matches no phase, so a lane
+# carrying it is an exact no-op (no state change, no psync, no n_ops, result
+# False) -- the padding value the shard router fills unused lane slots with.
+OP_CONTAINS, OP_INSERT, OP_REMOVE, OP_NOP = 0, 1, 2, 3
 
 # f32-exact integer budget of the MXU one-hot gather (see hash_probe.kernel).
 _F32_EXACT = 1 << 24
@@ -313,31 +315,35 @@ def contains(state: SetState, keys: jax.Array, *,
     return state, present
 
 
-@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
-def get(state: SetState, keys: jax.Array, *, spec: SetSpec,
-        default: int = 0) -> Tuple[SetState, jax.Array, jax.Array]:
-    """Value lookup: (state, values-or-default, present).  Read-path psync
-    semantics are identical to contains (SOFT: free; others may flush)."""
+def get_impl(state: SetState, keys: jax.Array, *, spec: SetSpec,
+             default: int = 0, active: Optional[jax.Array] = None
+             ) -> Tuple[SetState, jax.Array, jax.Array]:
+    """Unjitted get body (vmappable; the shard runtime maps it over the
+    stacked shard axis).  ``active`` masks out lanes that must be exact
+    no-ops (router padding)."""
     state, present, ids = DS._contains_impl(state, keys, mode=spec.mode,
-                                            lookup_fn=_lookup_fn(spec))
+                                            lookup_fn=_lookup_fn(spec),
+                                            active=active)
     eidx = jnp.clip(ids, 0, state.values.shape[0] - 1)
     vals = jnp.where(present, state.values[eidx], jnp.int32(default))
     return state, vals, present
 
 
 @functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
-def apply_batch(state: SetState, ops: jax.Array, keys: jax.Array,
-                values: jax.Array, *, spec: SetSpec
-                ) -> Tuple[SetState, jax.Array]:
-    """Mixed-op batch in one jitted dispatch: the serving traffic shape.
+def get(state: SetState, keys: jax.Array, *, spec: SetSpec,
+        default: int = 0) -> Tuple[SetState, jax.Array, jax.Array]:
+    """Value lookup: (state, values-or-default, present).  Read-path psync
+    semantics are identical to contains (SOFT: free; others may flush)."""
+    return get_impl(state, keys, spec=spec, default=default)
 
-    ``ops`` i32[B] of OP_CONTAINS / OP_INSERT / OP_REMOVE selects each
-    lane's operation on ``keys``/``values``.  Linearization: the contains
-    phase observes the pre-batch state, then inserts, then removes (so a
-    remove lane deletes a key inserted by an earlier lane of the same
-    batch), with lane priority inside each phase.  Returns success/presence
-    per lane.
-    """
+
+def apply_batch_impl(state: SetState, ops: jax.Array, keys: jax.Array,
+                     values: jax.Array, *, spec: SetSpec
+                     ) -> Tuple[SetState, jax.Array]:
+    """Unjitted mixed-batch body: one contains->insert->remove phase sweep.
+    Pure and vmappable -- :mod:`repro.core.shard` maps it over the stacked
+    shard axis in ONE dispatch.  Lanes whose op code matches no phase
+    (OP_NOP) are exact no-ops."""
     backend = get_backend(spec.backend)
     lookup_fn = _lookup_fn(spec)
     mt = backend.needs_probe_table
@@ -359,6 +365,37 @@ def apply_batch(state: SetState, ops: jax.Array, keys: jax.Array,
     return state, jnp.where(is_i, r_i, jnp.where(is_r, r_r, r_c))
 
 
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
+def apply_batch(state: SetState, ops: jax.Array, keys: jax.Array,
+                values: jax.Array, *, spec: SetSpec
+                ) -> Tuple[SetState, jax.Array]:
+    """Mixed-op batch in one jitted dispatch: the serving traffic shape.
+
+    ``ops`` i32[B] of OP_CONTAINS / OP_INSERT / OP_REMOVE selects each
+    lane's operation on ``keys``/``values``.  Linearization: the contains
+    phase observes the pre-batch state, then inserts, then removes (so a
+    remove lane deletes a key inserted by an earlier lane of the same
+    batch), with lane priority inside each phase.  Returns success/presence
+    per lane.
+    """
+    return apply_batch_impl(state, ops, keys, values, spec=spec)
+
+
+def recover_impl(persisted: jax.Array, keys: jax.Array, values: jax.Array,
+                 *, spec: SetSpec) -> Tuple[SetState, jax.Array]:
+    """Unjitted recovery body (vmappable -- the shard runtime rebuilds all
+    shards' volatile indexes in one vmapped dispatch)."""
+    backend = get_backend(spec.backend)
+    member, hist = backend.recover_scan(spec, persisted)
+    nb, w, s = backend.state_geometry(spec)
+    state = DS._rebuild_from_member(
+        member, keys, values, spec.table_factor, spec.max_probe,
+        n_buckets=nb, bucket_width=w, stash_size=s,
+        build_table=backend.needs_probe_table,
+        index_init=functools.partial(backend.init_index, spec))
+    return state, hist
+
+
 @functools.partial(jax.jit, static_argnames=("spec",))
 def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array, *,
             spec: SetSpec) -> Tuple[SetState, jax.Array]:
@@ -369,15 +406,7 @@ def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array, *,
     bulk-built (``build_buckets`` via backend.init_index).
     Returns (state, stage histogram i32[5]) -- the recovery telemetry.
     No psync is ever issued: payloads are already durable."""
-    backend = get_backend(spec.backend)
-    member, hist = backend.recover_scan(spec, persisted)
-    nb, w, s = backend.state_geometry(spec)
-    state = DS._rebuild_from_member(
-        member, keys, values, spec.table_factor, spec.max_probe,
-        n_buckets=nb, bucket_width=w, stash_size=s,
-        build_table=backend.needs_probe_table,
-        index_init=functools.partial(backend.init_index, spec))
-    return state, hist
+    return recover_impl(persisted, keys, values, spec=spec)
 
 
 def crash_and_recover(state: SetState, u: jax.Array, *, spec: SetSpec
@@ -408,15 +437,36 @@ class DurableMap:
         self.spec = spec
         self.state = make_state(spec)
         self.last_recovery_hist = None   # i32[5] stage histogram, post-recover
+        self._overflow_warned = False
 
     @staticmethod
     def _i32(x) -> jax.Array:
         return jnp.asarray(x, jnp.int32)
 
+    @property
+    def overflowed(self) -> bool:
+        """True once the index overflow latch fired: node-pool exhaustion, a
+        probe chain past ``max_probe``, or a bucket-backend stash spill past
+        ``stash_size``.  Data may be unreachable from that point on --
+        detectable, never silent (DESIGN.md §5)."""
+        return bool(self.state.overflow)
+
+    def _check_overflow(self):
+        """One-shot warning when a mutating op latches ``state.overflow``
+        instead of silently degrading lookups."""
+        if not self._overflow_warned and self.overflowed:
+            self._overflow_warned = True
+            warnings.warn(
+                f"{type(self).__name__} index overflow latched "
+                f"(capacity/probe/stash exhausted for spec={self.spec}); "
+                "subsequent lookups may miss live keys -- grow capacity, "
+                "stash_size, or shard the map", RuntimeWarning, stacklevel=3)
+
     def insert(self, keys, values=None):
         keys = self._i32(keys)
         values = keys if values is None else self._i32(values)
         self.state, ok = insert(self.state, keys, values, spec=self.spec)
+        self._check_overflow()
         return ok
 
     def remove(self, keys):
@@ -439,6 +489,7 @@ class DurableMap:
         values = keys if values is None else self._i32(values)
         self.state, res = apply_batch(self.state, self._i32(ops), keys,
                                       values, spec=self.spec)
+        self._check_overflow()
         return res
 
     def crash_and_recover(self, u=None):
@@ -446,6 +497,8 @@ class DurableMap:
             u = jnp.zeros_like(self.state.cur, jnp.float32)
         self.state, hist = crash_and_recover(self.state, u, spec=self.spec)
         self.last_recovery_hist = np.asarray(hist)
+        self._overflow_warned = False    # fresh latch after the rebuild
+        self._check_overflow()
         return self
 
     @property

@@ -1,0 +1,467 @@
+"""Sharded DurableMap: hash-partitioned shard runtime (DESIGN.md §6).
+
+The paper's durable hash table scales because hash-splitting the key space
+makes threads rarely collide (per-bucket lock-free lists, Section 5); the
+same composition holds one level up: S *independent* durable sets, each with
+its own node pool and volatile index, multiply capacity and throughput while
+preserving the per-partition psync story (SOFT stays at 1 psync per update
+*per shard* -- psync cost is additive across partitions, so the global bound
+is unchanged).  Crash and recovery compose the same way: each shard's
+volatile index is rebuilt independently, so recovery is embarrassingly
+parallel -- the paper's parallel-recovery claim at the subsystem level.
+
+Layout:
+
+  partitioning  shard id = the HIGH ``log2(S)`` bits of ``hash32(key)``.
+                The in-shard structures consume the LOW bits (bucket index,
+                probe table), so shard routing is independent of in-shard
+                placement -- no correlated collisions.
+  state         one stacked :class:`SetState` pytree with a leading shard
+                axis: every leaf of the per-shard state gains dim0 == S.
+                Probe/scan/bucket backends (including the Pallas kernels)
+                run under the stack unchanged.
+  routing       :func:`route` is a jit-compatible sort/segment router: lanes
+                are stably argsorted by shard id (stability preserves lane
+                priority, the deterministic CAS stand-in of DESIGN.md §2),
+                positioned within their shard segment, and scattered into an
+                (S, L) lane grid whose unused slots carry ``OP_NOP`` (an
+                exact no-op).  L is the *lane budget* -- a static function
+                of the batch size that shrinks the sequential per-lane loops
+                from B to ~B/S iterations (the sharded speedup).  A shard
+                receiving more than L lanes *drops* the excess (result
+                False, no side effect) and reports the count -- detectable,
+                never silent; small batches default to L == B (never drops).
+  dispatch      ALL shards execute in ONE vmapped ``apply_batch_impl``
+                dispatch.  With ``use_shard_map=True`` and more than one
+                device, the vmapped call is additionally partitioned over a
+                1-D device mesh via ``shard_map`` (each device owns S/D
+                shards); semantics are identical because shards never
+                communicate.
+  recovery      ``crash_and_recover`` draws an independent adversary ``u``
+                per shard and rebuilds every volatile index in one vmapped
+                ``recover_impl`` dispatch (the Pallas ``recovery_scan``
+                kernel runs batched over the shard axis).
+
+:class:`ShardedDurableMap` mirrors the :class:`DurableMap` API exactly
+(insert / remove / contains / get / apply / crash_and_recover / psyncs /
+ops / len / overflowed), so every index backend and driver works under
+sharding unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+from repro.core import durable_set as DS
+from repro.core import engine as E
+from repro.core.durable_set import SetState
+from repro.core.engine import (OP_CONTAINS, OP_INSERT, OP_NOP, OP_REMOVE,
+                               SetSpec)
+from repro.core.nvm import hash32, np_hash32
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Frozen configuration of a sharded durable map (static jit arg).
+
+    base            per-map :class:`SetSpec`; ``base.capacity`` is the
+                    TOTAL capacity, split evenly across shards (every other
+                    knob -- mode, backend, geometry -- applies per shard)
+    n_shards        shard count S (power of two: routing takes the high
+                    ``log2(S)`` bits of ``hash32``)
+    lane_factor     head-room multiplier sizing the per-shard lane budget
+                    L(B) = next_pow2(lane_factor * ceil(B / S))
+    min_lane_budget lower clamp on L; batches of B <= min_lane_budget get
+                    L == B, i.e. routing can never drop a lane
+    use_shard_map   partition the vmapped dispatch over a 1-D device mesh
+                    when more than one device is available (opt-in; a
+                    single-device process silently stays on plain vmap)
+    """
+    base: SetSpec
+    n_shards: int = 8
+    lane_factor: int = 2
+    min_lane_budget: int = 32
+    use_shard_map: bool = False
+
+    def __post_init__(self):
+        s = self.n_shards
+        if s < 1 or (s & (s - 1)) != 0:
+            raise ValueError(f"n_shards must be a power of two, got {s}")
+        if self.lane_factor < 1:
+            raise ValueError("lane_factor must be >= 1")
+        if self.min_lane_budget < 1:
+            raise ValueError("min_lane_budget must be >= 1")
+
+    def shard_spec(self) -> SetSpec:
+        """The per-shard SetSpec: total capacity split evenly (ceil)."""
+        cap = -(-self.base.capacity // self.n_shards)
+        return dataclasses.replace(self.base, capacity=cap)
+
+    def lane_budget(self, batch: int) -> int:
+        """Per-shard lane slots L for a B-lane batch (static: B is a trace-
+        time shape).  Small batches route loss-free (L == B); large batches
+        take L ~ lane_factor * B / S, the source of the sharded speedup."""
+        if self.n_shards == 1 or batch <= self.min_lane_budget:
+            return batch
+        per = -(-batch // self.n_shards) * self.lane_factor
+        return min(batch, 1 << max(per - 1, self.min_lane_budget - 1)
+                   .bit_length())
+
+
+# ---------------------------------------------------------------------------
+# Partitioning + router
+# ---------------------------------------------------------------------------
+
+
+def shard_of(keys: jax.Array, n_shards: int) -> jax.Array:
+    """Shard id per key: the high log2(S) bits of hash32 (the in-shard
+    index consumes the low bits, so placement stays uncorrelated)."""
+    if n_shards == 1:
+        return jnp.zeros(keys.shape, jnp.int32)
+    bits = n_shards.bit_length() - 1
+    return (hash32(keys) >> jnp.uint32(32 - bits)).astype(jnp.int32)
+
+
+def np_shard_of(keys: np.ndarray, n_shards: int) -> np.ndarray:
+    """Host-side twin of :func:`shard_of` (test oracles, pre-routing)."""
+    keys = np.asarray(keys)
+    if n_shards == 1:
+        return np.zeros(keys.shape, np.int32)
+    bits = n_shards.bit_length() - 1
+    return (np_hash32(keys) >> np.uint32(32 - bits)).astype(np.int32)
+
+
+def route(ops: jax.Array, keys: jax.Array, values: jax.Array, *,
+          n_shards: int, lane_budget: int
+          ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Sort/segment router: B mixed lanes -> an (S, L) per-shard lane grid.
+
+    Lanes are stably argsorted by shard id -- stability keeps the original
+    lane order inside every shard, so per-shard lane priority equals global
+    lane priority (same-key lanes always share a shard).  Each lane lands at
+    its rank within the shard's segment; ranks >= L are DROPPED (reported,
+    not executed).  Unused slots carry ``OP_NOP`` / key 0 and are exact
+    no-ops.
+
+    Returns ``(r_ops, r_keys, r_values, slot, dropped)``: the (S, L) grids,
+    the flat grid slot per original lane (-1 == dropped), and the dropped-
+    lane count.
+    """
+    b = keys.shape[0]
+    s, l = n_shards, lane_budget
+    sid = shard_of(keys, s)
+    order = jnp.argsort(sid, stable=True)
+    ssort = sid[order]
+    idx = jnp.arange(b, dtype=jnp.int32)
+    seg0 = jnp.full((s,), b, jnp.int32).at[ssort].min(idx)   # segment starts
+    pos = idx - seg0[ssort]                                  # rank in shard
+    keep = pos < l
+    flat = jnp.where(keep, ssort * l + pos, s * l)           # OOB == drop
+
+    def scatter(x, fill):
+        return jnp.full((s * l,), fill, jnp.int32).at[flat].set(
+            x[order], mode="drop").reshape(s, l)
+
+    r_ops = scatter(ops, OP_NOP)
+    r_keys = scatter(keys, 0)
+    r_vals = scatter(values, 0)
+    slot = jnp.full((b,), -1, jnp.int32).at[order].set(
+        jnp.where(keep, flat, -1))
+    dropped = jnp.sum((~keep).astype(jnp.int32))
+    return r_ops, r_keys, r_vals, slot, dropped
+
+
+def gather(grid: jax.Array, slot: jax.Array, fill) -> jax.Array:
+    """Inverse of :func:`route` for per-lane results: (S, L) -> [B], with
+    ``fill`` for dropped lanes."""
+    flat = grid.reshape(-1)
+    got = flat[jnp.clip(slot, 0, flat.shape[0] - 1)]
+    return jnp.where(slot >= 0, got, fill)
+
+
+# ---------------------------------------------------------------------------
+# Stacked state + dispatch
+# ---------------------------------------------------------------------------
+
+
+def make_state(sspec: ShardSpec) -> SetState:
+    """Stacked fresh state: every SetState leaf gains a leading shard axis
+    (dim0 == S).  Each slice is exactly ``engine.make_state(shard_spec)``."""
+    base = E.make_state(sspec.shard_spec())
+    return jax.tree.map(
+        lambda x: jnp.repeat(x[None], sspec.n_shards, axis=0), base)
+
+
+def _mesh_devices(sspec: ShardSpec) -> int:
+    """Devices the shard axis can split over: the largest power-of-two
+    divisor of n_shards that the process has devices for (1 == plain vmap)."""
+    if not sspec.use_shard_map:
+        return 1
+    d = sspec.n_shards
+    avail = jax.device_count()
+    while d > 1 and d > avail:
+        d //= 2
+    return d
+
+def _dispatch(vfn, sspec: ShardSpec):
+    """Wrap a shard-axis-vmapped function for execution: identity on a
+    single device, ``shard_map`` over a 1-D ("shards",) mesh otherwise.
+    Shards never communicate, so partitioning dim0 is semantics-preserving.
+    """
+    d = _mesh_devices(sspec)
+    if d <= 1:
+        return vfn
+    # lazy core -> launch import, only on the opt-in multi-device path
+    from repro.launch.mesh import compat_make_mesh, compat_shard_map
+    mesh = compat_make_mesh((d,), ("shards",))
+    p = PartitionSpec("shards")
+    return compat_shard_map(vfn, mesh, in_specs=p, out_specs=p)
+
+
+def _apply_impl(state: SetState, ops: jax.Array, keys: jax.Array,
+                values: jax.Array, *, sspec: ShardSpec
+                ) -> Tuple[SetState, jax.Array, jax.Array]:
+    """Route a mixed batch and execute every shard in ONE vmapped dispatch.
+    Returns (stacked state, per-lane result, dropped-lane count)."""
+    l = sspec.lane_budget(keys.shape[0])
+    r_ops, r_keys, r_vals, slot, dropped = route(
+        ops, keys, values, n_shards=sspec.n_shards, lane_budget=l)
+    fn = functools.partial(E.apply_batch_impl, spec=sspec.shard_spec())
+    state, r_res = _dispatch(jax.vmap(fn), sspec)(state, r_ops, r_keys,
+                                                  r_vals)
+    return state, gather(r_res, slot, False), dropped
+
+
+@functools.partial(jax.jit, static_argnames=("sspec",), donate_argnums=(0,))
+def apply_batch(state: SetState, ops: jax.Array, keys: jax.Array,
+                values: jax.Array, *, sspec: ShardSpec
+                ) -> Tuple[SetState, jax.Array, jax.Array]:
+    """Sharded mixed-op batch: route + one vmapped dispatch.  Linearization
+    is per shard (phase order with lane priority, DESIGN.md §4); shards are
+    disjoint key spaces, so any interleaving of per-shard histories is a
+    legal global history."""
+    return _apply_impl(state, ops, keys, values, sspec=sspec)
+
+
+@functools.partial(jax.jit, static_argnames=("sspec",), donate_argnums=(0,))
+def insert(state: SetState, keys: jax.Array, values: jax.Array, *,
+           sspec: ShardSpec) -> Tuple[SetState, jax.Array, jax.Array]:
+    ops = jnp.full(keys.shape, OP_INSERT, jnp.int32)
+    return _apply_impl(state, ops, keys, values, sspec=sspec)
+
+
+@functools.partial(jax.jit, static_argnames=("sspec",), donate_argnums=(0,))
+def remove(state: SetState, keys: jax.Array, *, sspec: ShardSpec
+           ) -> Tuple[SetState, jax.Array, jax.Array]:
+    ops = jnp.full(keys.shape, OP_REMOVE, jnp.int32)
+    return _apply_impl(state, ops, keys, keys, sspec=sspec)
+
+
+@functools.partial(jax.jit, static_argnames=("sspec",), donate_argnums=(0,))
+def contains(state: SetState, keys: jax.Array, *, sspec: ShardSpec
+             ) -> Tuple[SetState, jax.Array, jax.Array]:
+    ops = jnp.full(keys.shape, OP_CONTAINS, jnp.int32)
+    return _apply_impl(state, ops, keys, keys, sspec=sspec)
+
+
+@functools.partial(jax.jit, static_argnames=("sspec", "default"),
+                   donate_argnums=(0,))
+def get(state: SetState, keys: jax.Array, *, sspec: ShardSpec,
+        default: int = 0
+        ) -> Tuple[SetState, jax.Array, jax.Array, jax.Array]:
+    """Sharded value lookup: (state, values-or-default, present, dropped)."""
+    l = sspec.lane_budget(keys.shape[0])
+    ops = jnp.full(keys.shape, OP_CONTAINS, jnp.int32)
+    r_ops, r_keys, _, slot, dropped = route(
+        ops, keys, keys, n_shards=sspec.n_shards, lane_budget=l)
+    fn = functools.partial(E.get_impl, spec=sspec.shard_spec(),
+                           default=default)
+    state, r_vals, r_pres = _dispatch(
+        jax.vmap(lambda st, k, a: fn(st, k, active=a)), sspec)(
+            state, r_keys, r_ops == OP_CONTAINS)
+    vals = gather(r_vals, slot, jnp.int32(default))
+    present = gather(r_pres, slot, False)
+    return state, vals, present, dropped
+
+
+# ---------------------------------------------------------------------------
+# Crash + parallel recovery
+# ---------------------------------------------------------------------------
+
+
+def crash(state: SetState, u: jax.Array
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Power failure across all shards.  ``u`` is the per-shard adversary,
+    (S, N_shard) in [0, 1); the stage-machine crash is elementwise, so the
+    stacked state needs no explicit vmap."""
+    return DS.crash(state, u)
+
+
+@functools.partial(jax.jit, static_argnames=("sspec",))
+def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array, *,
+            sspec: ShardSpec) -> Tuple[SetState, jax.Array]:
+    """Parallel recovery: every shard's classification scan + volatile-index
+    rebuild runs in ONE vmapped dispatch (the Pallas ``recovery_scan``
+    kernel batches over the shard axis).  Returns (stacked state, per-shard
+    stage histogram i32[S, 5])."""
+    fn = functools.partial(E.recover_impl, spec=sspec.shard_spec())
+    return _dispatch(jax.vmap(fn), sspec)(persisted, keys, values)
+
+
+def crash_and_recover(state: SetState, u: jax.Array, *, sspec: ShardSpec
+                      ) -> Tuple[SetState, jax.Array]:
+    return recover(*crash(state, u), sspec=sspec)
+
+
+# ---------------------------------------------------------------------------
+# OO façade (mirrors DurableMap exactly)
+# ---------------------------------------------------------------------------
+
+
+class ShardedDurableMap:
+    """DurableMap façade over S independent shards (single-controller).
+
+    >>> m = ShardedDurableMap(SetSpec(capacity=65536, backend="bucket"),
+    ...                       n_shards=8)
+    >>> m.insert([1, 2], [10, 20])
+    >>> m.contains([1, 3])          # -> [True, False]
+    >>> m.crash_and_recover()       # per-shard adversary, vmapped rebuild
+
+    Every backend registered with the engine works unchanged.  Routing past
+    the lane budget drops lanes (counted in ``router_dropped``, warned once,
+    result False) -- impossible for batches of <= ``min_lane_budget`` lanes.
+    """
+
+    def __init__(self, spec=None, n_shards: Optional[int] = None,
+                 **spec_kwargs):
+        if isinstance(spec, ShardSpec):
+            if n_shards is not None:
+                spec_kwargs["n_shards"] = n_shards
+            sspec = dataclasses.replace(spec, **spec_kwargs) \
+                if spec_kwargs else spec
+        else:
+            shard_kw = {k: spec_kwargs.pop(k)
+                        for k in ("lane_factor", "min_lane_budget",
+                                  "use_shard_map")
+                        if k in spec_kwargs}
+            if spec is None:
+                spec = SetSpec(**spec_kwargs)
+            elif spec_kwargs:
+                spec = dataclasses.replace(spec, **spec_kwargs)
+            sspec = ShardSpec(base=spec,
+                              n_shards=8 if n_shards is None else n_shards,
+                              **shard_kw)
+        E.get_backend(sspec.base.backend)     # fail fast
+        sspec.shard_spec()                    # validate per-shard geometry
+        self.sspec = sspec
+        self.state = make_state(sspec)
+        self.last_recovery_hist = None        # i32[5], summed over shards
+        self.last_recovery_hist_shards = None  # i32[S, 5]
+        self.router_dropped = 0
+        self._overflow_warned = False
+        self._dropped_warned = False
+
+    # -- plumbing shared with DurableMap ------------------------------------
+    _i32 = staticmethod(E.DurableMap._i32)
+
+    @property
+    def spec(self) -> SetSpec:
+        """The per-shard SetSpec actually executing."""
+        return self.sspec.shard_spec()
+
+    @property
+    def n_shards(self) -> int:
+        return self.sspec.n_shards
+
+    @property
+    def overflowed(self) -> bool:
+        """True once ANY shard latched its index overflow (see
+        ``DurableMap.overflowed``)."""
+        return bool(self.state.overflow.any())
+
+    def _finish(self, res, dropped):
+        d = int(dropped)
+        if d:
+            self.router_dropped += d
+            if not self._dropped_warned:
+                self._dropped_warned = True
+                warnings.warn(
+                    f"ShardedDurableMap dropped {d} lane(s): a shard "
+                    f"received more than the lane budget; raise lane_factor "
+                    f"or submit smaller batches (sspec={self.sspec})",
+                    RuntimeWarning, stacklevel=3)
+        if not self._overflow_warned and self.overflowed:
+            self._overflow_warned = True
+            warnings.warn(
+                f"ShardedDurableMap index overflow latched on a shard "
+                f"(spec={self.spec}); lookups may miss live keys -- grow "
+                "capacity, stash_size, or n_shards", RuntimeWarning,
+                stacklevel=3)
+        return res
+
+    def insert(self, keys, values=None):
+        keys = self._i32(keys)
+        values = keys if values is None else self._i32(values)
+        self.state, ok, dropped = insert(self.state, keys, values,
+                                         sspec=self.sspec)
+        return self._finish(ok, dropped)
+
+    def remove(self, keys):
+        self.state, ok, dropped = remove(self.state, self._i32(keys),
+                                         sspec=self.sspec)
+        return self._finish(ok, dropped)
+
+    def contains(self, keys):
+        self.state, ok, dropped = contains(self.state, self._i32(keys),
+                                           sspec=self.sspec)
+        return self._finish(ok, dropped)
+
+    def get(self, keys, default: int = 0):
+        """Values for present keys, ``default`` otherwise."""
+        self.state, vals, _, dropped = get(self.state, self._i32(keys),
+                                           sspec=self.sspec, default=default)
+        return self._finish(vals, dropped)
+
+    def apply(self, ops, keys, values=None):
+        """Mixed contains/insert/remove batch; see :func:`apply_batch`."""
+        keys = self._i32(keys)
+        values = keys if values is None else self._i32(values)
+        self.state, res, dropped = apply_batch(self.state, self._i32(ops),
+                                               keys, values, sspec=self.sspec)
+        return self._finish(res, dropped)
+
+    def crash_and_recover(self, u=None, seed: int = 0):
+        """Crash all shards and rebuild in one vmapped recovery dispatch.
+        ``u`` defaults to an INDEPENDENT uniform adversary per shard."""
+        if u is None:
+            u = np.random.default_rng(seed).random(
+                self.state.cur.shape).astype(np.float32)
+        self.state, hist = crash_and_recover(self.state, jnp.asarray(u),
+                                             sspec=self.sspec)
+        self.last_recovery_hist_shards = np.asarray(hist)
+        self.last_recovery_hist = self.last_recovery_hist_shards.sum(axis=0)
+        self._overflow_warned = False         # fresh latch after the rebuild
+        self._finish(None, 0)
+        return self
+
+    @property
+    def psyncs(self):
+        return int(self.state.n_psync.sum())
+
+    @property
+    def ops(self):
+        return int(self.state.n_ops.sum())
+
+    def __len__(self):
+        return int(self.state.size.sum())
+
+    def __repr__(self):
+        return (f"ShardedDurableMap(size={len(self)}, psyncs={self.psyncs}, "
+                f"n_shards={self.n_shards}, spec={self.spec})")

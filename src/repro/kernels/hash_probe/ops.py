@@ -17,10 +17,10 @@ kernel ``probe_pallas`` (or the jnp reference).
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.core.nvm import hash32, EMPTY, VALID
 from repro.kernels.hash_probe.kernel import probe_pallas
@@ -76,65 +76,81 @@ def bucket_init(keys: jax.Array, cur: jax.Array, *, nb: int, w: int, s: int):
     return bkeys, bids, skeys, sids, jnp.minimum(spill, s), spill > s
 
 
+def _nth_free(free: jax.Array, rank: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per row of ``free`` (B, K): the column of the (rank+1)-th free slot
+    in ascending order, plus a found flag.  This is exactly the slot a lane
+    of claim-order ``rank`` receives from sequential first-free claiming,
+    because slots are only ever *consumed* within one call."""
+    c = jnp.cumsum(free.astype(jnp.int32), axis=1)
+    hit = free & (c == (rank + 1)[:, None])
+    ok = hit.any(axis=1)
+    col = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    return col, ok
+
+
 def bucket_insert(bkeys, bids, skeys, sids, stash_n, keys, ids, do):
     """Incremental insert: for lanes with do[i], place node ids[i] (key
     keys[i]) into the first free way of its bucket, or the first free dense
-    stash slot when the bucket is full.  The fori_loop over lanes is the
-    linearization order, exactly as in ``_table_write``.  O(B*W + B*S)."""
+    stash slot when the bucket is full.
+
+    Vectorized sequential-equivalent: lane order is the linearization order
+    (exactly as in ``_table_write``), and since ways/slots are only consumed
+    here, the lane of in-bucket claim-rank r deterministically receives the
+    (r+1)-th free way -- one O(B^2) rank computation plus ONE scatter per
+    plane instead of a B-step sequential loop (the former apply_batch
+    bottleneck)."""
     nb, _ = bkeys.shape
-    bucket = (hash32(keys) % jnp.uint32(nb)).astype(jnp.int32)
     b = keys.shape[0]
+    bucket = (hash32(keys) % jnp.uint32(nb)).astype(jnp.int32)
+    earlier = jnp.tril(jnp.ones((b, b), jnp.bool_), k=-1)
 
-    def lane(i, carry):
-        bkeys, bids, skeys, sids, stash_n, ovf = carry
-        bi = bucket[i]
-        freeway = bids[bi] == EMPTY
-        has_way = freeway.any()
-        way = jnp.argmax(freeway).astype(jnp.int32)
-        place = do[i] & has_way
-        bkeys = bkeys.at[bi, way].set(
-            jnp.where(place, keys[i], bkeys[bi, way]))
-        bids = bids.at[bi, way].set(jnp.where(place, ids[i], bids[bi, way]))
-        freeslot = sids == EMPTY
-        has_slot = freeslot.any()
-        slot = jnp.argmax(freeslot).astype(jnp.int32)
-        spill = do[i] & ~has_way
-        put = spill & has_slot
-        skeys = skeys.at[slot].set(jnp.where(put, keys[i], skeys[slot]))
-        sids = sids.at[slot].set(jnp.where(put, ids[i], sids[slot]))
-        stash_n = stash_n + put.astype(jnp.int32)
-        return bkeys, bids, skeys, sids, stash_n, ovf | (spill & ~has_slot)
+    # claim order among do-lanes of the same bucket == sequential lane order
+    same = do[:, None] & do[None, :] & (bucket[:, None] == bucket[None, :])
+    rank = jnp.sum(same & earlier, axis=1).astype(jnp.int32)
+    way, has_way = _nth_free(bids[bucket] == EMPTY, rank)
+    place = do & has_way
+    tb = jnp.where(place, bucket, nb)                  # OOB scatter => drop
+    bkeys = bkeys.at[tb, way].set(keys, mode="drop")
+    bids = bids.at[tb, way].set(ids, mode="drop")
 
-    return lax.fori_loop(0, b, lane, (bkeys, bids, skeys, sids, stash_n,
-                                      jnp.bool_(False)))
+    # bucket-full lanes spill to the dense stash, same claim-rank argument
+    spill = do & ~has_way
+    srank = jnp.sum(spill[:, None] & spill[None, :] & earlier,
+                    axis=1).astype(jnp.int32)
+    slot, has_slot = _nth_free((sids == EMPTY)[None, :].repeat(b, 0), srank)
+    put = spill & has_slot
+    ts = jnp.where(put, slot, sids.shape[0])
+    skeys = skeys.at[ts].set(keys, mode="drop")
+    sids = sids.at[ts].set(ids, mode="drop")
+    stash_n = stash_n + jnp.sum(put.astype(jnp.int32))
+    ovf = (spill & ~has_slot).any()
+    return bkeys, bids, skeys, sids, stash_n, ovf
 
 
 def bucket_remove(bkeys, bids, skeys, sids, stash_n, keys, ids, do):
     """Incremental delete: free the way (or dense stash slot) holding node
     ids[i] for lanes with do[i].  A live node is in the bucket table XOR
-    the stash, so exactly one of the two clears fires.  O(B*W + B*S)."""
+    the stash, so exactly one of the two clears fires.  Do-lanes carry
+    DISTINCT node ids (the op bodies dedup by lane priority), so all
+    scatter targets are distinct and one scatter per plane suffices."""
     nb, _ = bkeys.shape
     bucket = (hash32(keys) % jnp.uint32(nb)).astype(jnp.int32)
-    b = keys.shape[0]
 
-    def lane(i, carry):
-        bkeys, bids, skeys, sids, stash_n, ovf = carry
-        bi = bucket[i]
-        hitw = bids[bi] == ids[i]
-        in_table = do[i] & hitw.any()
-        way = jnp.argmax(hitw).astype(jnp.int32)
-        bids = bids.at[bi, way].set(jnp.where(in_table, EMPTY, bids[bi, way]))
-        bkeys = bkeys.at[bi, way].set(jnp.where(in_table, 0, bkeys[bi, way]))
-        hits = sids == ids[i]
-        in_stash = do[i] & ~in_table & hits.any()
-        slot = jnp.argmax(hits).astype(jnp.int32)
-        sids = sids.at[slot].set(jnp.where(in_stash, EMPTY, sids[slot]))
-        skeys = skeys.at[slot].set(jnp.where(in_stash, 0, skeys[slot]))
-        stash_n = stash_n - in_stash.astype(jnp.int32)
-        return bkeys, bids, skeys, sids, stash_n, ovf
+    hitw = bids[bucket] == ids[:, None]                # (B, W)
+    in_table = do & hitw.any(axis=1)
+    way = jnp.argmax(hitw, axis=1).astype(jnp.int32)
+    tb = jnp.where(in_table, bucket, nb)               # OOB scatter => drop
+    bids = bids.at[tb, way].set(EMPTY, mode="drop")
+    bkeys = bkeys.at[tb, way].set(0, mode="drop")
 
-    return lax.fori_loop(0, b, lane, (bkeys, bids, skeys, sids, stash_n,
-                                      jnp.bool_(False)))
+    hits = sids[None, :] == ids[:, None]               # (B, S)
+    in_stash = do & ~in_table & hits.any(axis=1)
+    slot = jnp.argmax(hits, axis=1).astype(jnp.int32)
+    ts = jnp.where(in_stash, slot, sids.shape[0])
+    sids = sids.at[ts].set(EMPTY, mode="drop")
+    skeys = skeys.at[ts].set(0, mode="drop")
+    stash_n = stash_n - jnp.sum(in_stash.astype(jnp.int32))
+    return bkeys, bids, skeys, sids, stash_n, jnp.bool_(False)
 
 
 def lookup(bucket_keys, bucket_ids, q_keys, *, use_pallas=True,

@@ -6,10 +6,13 @@ the volatile index but not the registry, so after recovery the server
 knows exactly which requests had completed (no double-billing /
 re-generation) -- durable linearizability doing real work.  --backend
 picks the registry's index backend ("bucket" = the Pallas hash_probe /
-recovery_scan kernel path, DESIGN.md §4).
+recovery_scan kernel path, DESIGN.md §4); --shards N > 1 swaps in the
+hash-partitioned ShardedDurableMap (one vmapped dispatch over N shards,
+per-shard parallel recovery, DESIGN.md §6) -- the production registry
+shape for millions of request ids.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b-smoke \
-      --requests 8 --gen 16 [--crash] [--backend bucket]
+      --requests 8 --gen 16 [--crash] [--backend bucket] [--shards 8]
 """
 from __future__ import annotations
 
@@ -21,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import DurableMap, SetSpec
+from repro.core import DurableMap, ShardedDurableMap, SetSpec
 from repro.models import model as M
 from repro.models.sharding import CPU_CTX
 from repro.train import steps as TS
@@ -37,6 +40,9 @@ def main(argv=None):
     ap.add_argument("--backend", default="probe",
                     choices=("probe", "scan", "bucket"),
                     help="registry index backend (bucket = Pallas kernels)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="hash-partition the registry over N shards "
+                         "(N > 1 = ShardedDurableMap, one vmapped dispatch)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -45,8 +51,11 @@ def main(argv=None):
     prefill_step = jax.jit(prefill_step)
     decode_step = jax.jit(decode_step)
 
-    registry = DurableMap(SetSpec(capacity=1024, mode="soft",
-                                  backend=args.backend))
+    spec = SetSpec(capacity=1024, mode="soft", backend=args.backend)
+    if args.shards > 1:       # same façade API, hash-partitioned runtime
+        registry = ShardedDurableMap(spec, n_shards=args.shards)
+    else:
+        registry = DurableMap(spec)
     b = args.requests
     max_seq = args.prompt_len + args.gen
     rng = np.random.default_rng(0)
@@ -71,7 +80,8 @@ def main(argv=None):
     # durably record completions: one psync per request (SOFT bound)
     req_ids = np.arange(1000, 1000 + b, dtype=np.int32)
     registry.insert(req_ids, np.asarray(gen[:, -1]))
-    print(f"registry[{args.backend}]: {len(registry)} completed, "
+    shard_tag = f" x{args.shards} shards" if args.shards > 1 else ""
+    print(f"registry[{args.backend}{shard_tag}]: {len(registry)} completed, "
           f"psyncs={registry.psyncs} (== #requests)")
 
     if args.crash:

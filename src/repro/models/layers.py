@@ -231,11 +231,12 @@ def _sharded_flash_decode(ctx: ShardCtx, q, ck, cv, valid_len):
         out = acc_g / jnp.maximum(l_g, 1e-30)
         return out.reshape(b, 1, h, d).astype(qx.dtype)
 
-    f = jax.shard_map(
-        local, mesh=mesh,
+    from repro.launch.mesh import compat_shard_map
+    f = compat_shard_map(
+        local, mesh,
         in_specs=(P(dp, None, None, None), P(dp, tp, None, None),
                   P(dp, tp, None, None), P(dp)),
-        out_specs=P(dp, None, None, None), check_vma=False)
+        out_specs=P(dp, None, None, None))
     return f(q, ck, cv, valid_len)
 
 

@@ -1,5 +1,7 @@
 """Engine tests: backend conformance, Pallas-kernel wiring, mixed-op
 apply_batch, bucket overflow/stash, TOMB-slot reuse, counter saturation."""
+import warnings
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -254,6 +256,47 @@ def test_table_write_reuses_tomb_slot_after_remove():
     assert (table >= 0).sum() == 2
     # lookups past the reused slot still find the survivor b
     assert list(np.array(m.contains([a, b, c]))) == [False, True, True]
+
+
+# ---------------------------------------------------------------------------
+# Façade surface: the DurableSet deprecation shim, get() default semantics,
+# and the surfaced overflow latch.
+# ---------------------------------------------------------------------------
+
+def test_durable_set_shim_emits_deprecation_warning():
+    from repro.core import DurableSet
+    with pytest.warns(DeprecationWarning, match="DurableMap"):
+        s = DurableSet(64, mode="soft", index="bucket")
+    assert s.mode == "soft" and s.index == "bucket"
+    assert s.spec.backend == "bucket"     # index= maps 1:1 onto backends
+    s.insert([3, 4])
+    assert list(np.array(s.contains([3, 5]))) == [True, False]
+
+
+@pytest.mark.parametrize("backend", BACKEND_NAMES)
+def test_get_default_value_semantics(backend):
+    m = DurableMap(SetSpec(capacity=64, mode="soft", backend=backend))
+    m.insert([1, 2], [10, 0])
+    # missing key -> default; present key -> stored value (0 included)
+    assert list(np.array(m.get([1, 2, 9]))) == [10, 0, 0]
+    assert list(np.array(m.get([1, 2, 9], default=-7))) == [10, 0, -7]
+    # a removed key reverts to the default, whatever its old value was
+    m.remove([1])
+    assert list(np.array(m.get([1], default=5))) == [5]
+    # get() pays contains psync semantics: nothing extra under SOFT
+    assert m.psyncs == 3                  # 2 inserts + 1 remove
+
+
+def test_overflow_latch_surfaces_with_one_shot_warning():
+    m = DurableMap(SetSpec(capacity=4, mode="soft"))
+    assert not m.overflowed
+    with pytest.warns(RuntimeWarning, match="overflow latched"):
+        m.insert(np.arange(10))           # pool exhausted -> latch
+    assert m.overflowed
+    with warnings.catch_warnings():       # one-shot: no repeat warning
+        warnings.simplefilter("error")
+        m.insert([99])
+    assert m.overflowed
 
 
 # ---------------------------------------------------------------------------

@@ -8,6 +8,7 @@ import numpy as np
 import pytest
 
 from repro.data.pipeline import SyntheticTokens, Prefetcher
+from repro.launch.mesh import compat_make_mesh, compat_shard_map
 from repro.runtime.ft import StragglerMonitor, ResilientLoop
 from repro.store.checkpoint import CheckpointManager
 from repro.optim.compress import compressed_psum, quantize, dequantize
@@ -85,16 +86,15 @@ def test_quantize_roundtrip():
 
 def test_compressed_psum_error_feedback():
     """int8 all-reduce with error feedback: mean error shrinks vs one-shot."""
-    n_dev = 1
-    mesh = jax.make_mesh((1,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((1,), ("d",))
 
     def body(g, r):
         return compressed_psum(g, r, "d")
 
-    f = jax.jit(jax.shard_map(
-        body, mesh=mesh,
+    f = jax.jit(compat_shard_map(
+        body, mesh,
         in_specs=(jax.sharding.PartitionSpec(),) * 2,
-        out_specs=(jax.sharding.PartitionSpec(),) * 2, check_vma=False))
+        out_specs=(jax.sharding.PartitionSpec(),) * 2))
     rng = np.random.default_rng(1)
     g = jnp.asarray(rng.standard_normal(512), jnp.float32)
     r = jnp.zeros(512)
@@ -114,8 +114,7 @@ def test_gpipe_matches_sequential():
     n = min(4, len(jax.devices()))
     if n < 2:
         pytest.skip("needs >=2 local devices for a pipeline")
-    mesh = jax.make_mesh((n,), ("pipe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((n,), ("pipe",))
     rng = np.random.default_rng(0)
     ws = jnp.asarray(rng.standard_normal((n, 8, 8)) * 0.3, jnp.float32)
     xs = jnp.asarray(rng.standard_normal((6, 2, 8)), jnp.float32)
