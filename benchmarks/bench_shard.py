@@ -2,7 +2,7 @@
 
 Runs the canonical mixed workload (capacity 65536, key range 65536, batch
 1024, 90% reads -- the same acceptance point ``bench_hash`` tracks) through
-the bucket backend (the Pallas production path) at EQUAL TOTAL CAPACITY in
+EVERY index backend (probe / scan / bucket) at EQUAL TOTAL CAPACITY in
 three configurations per psync mode:
 
   flat   the unsharded ``DurableMap`` engine path (``run_workload``)
@@ -10,12 +10,14 @@ three configurations per psync mode:
   s8     8 shards, one routed vmapped dispatch per round
 
 and writes ``BENCH_shard.json`` (uploaded as a CI artifact alongside
-``BENCH_hash.json``).  The headline acceptance quantity is the recorded
-``speedup.s8_vs_s1`` / ``speedup.s8_vs_flat`` of the soft mode: the S=8
-vmapped dispatch must sustain >= 2x the single-shard ops/sec.  The probe
-and scan backends run correctly under sharding (conformance battery) but
-their sequential probe/maintenance loops do not profit from the shard axis
-on CPU, so the tracked point is the bucket backend.
+``BENCH_hash.json``) with PER-BACKEND ``speedup.s8_vs_s1`` /
+``speedup.s8_vs_flat``.  Since the plan/commit pipeline (DESIGN.md §2a)
+every backend's mutation path is vectorized: scan and bucket profit from
+the shard axis (~4x / ~2-3x -- bucket's >= 2x plus the flat-bucket ops/s
+floor are enforced by ``benchmarks/check_regression.py`` in CI), while the
+vectorized probe backend is so fast flat (~20x the bucket path) that the
+canonical batch is dispatch-bound and its tracked ratio hovers ~1x -- see
+DESIGN.md §6 for why that is the expected shape, not a regression.
 
 ``--quick`` KEEPS the canonical geometry -- sharding pays off at scale, so
 shrinking capacity/batch would measure fixed dispatch overhead instead of
@@ -31,20 +33,21 @@ import jax
 from benchmarks.common import run_workload, run_sharded_workload, fmt_row
 
 MODES = ("soft", "linkfree", "logfree")
-BACKEND = "bucket"
+BACKENDS = ("probe", "scan", "bucket")
 SHARDS = (1, 8)
 
 OUT = "BENCH_shard.json"
 
 
-def run(quick: bool = False, out: str = OUT):
+def run(quick: bool = False, out: str = OUT, backend: str = None):
     cap, kr, batch, read_pct = 65536, 65536, 1024, 90   # the canonical point
     rounds = 5 if quick else 10
     modes = ("soft",) if quick else MODES
+    backends = tuple(backend.split(",")) if backend else BACKENDS
     payload = {
         "config": {"capacity": cap, "key_range": kr, "batch": batch,
                    "read_pct": read_pct, "rounds": rounds, "quick": quick,
-                   "backend": BACKEND, "shards": list(SHARDS),
+                   "backends": list(backends), "shards": list(SHARDS),
                    "jax": jax.__version__,
                    "device": jax.devices()[0].platform,
                    "machine": platform.machine()},
@@ -52,35 +55,38 @@ def run(quick: bool = False, out: str = OUT):
     }
     rows = []
     for mode in modes:
-        variants = {"flat": lambda m=mode: run_workload(
-            m, BACKEND, cap, kr, batch, read_pct, rounds=rounds)}
-        for s in SHARDS:
-            variants[f"s{s}"] = lambda m=mode, s=s: run_sharded_workload(
-                m, BACKEND, s, cap, kr, batch, read_pct, rounds=rounds)
-        for name, fn in variants.items():
-            r = fn()
-            payload["results"][f"{mode}_{BACKEND}_{name}"] = {
-                "ops_per_sec": r.ops_per_sec,
-                "psync_per_op": r.psync_per_op,
-                "psync_per_update": r.psync_per_update,
-            }
-            rows.append(fmt_row(f"bench_shard_{mode}_{BACKEND}_{name}", r,
-                                {"ops_per_sec": f"{r.ops_per_sec:.0f}"}))
+        for bk in backends:
+            variants = {"flat": lambda m=mode, b=bk: run_workload(
+                m, b, cap, kr, batch, read_pct, rounds=rounds)}
+            for s in SHARDS:
+                variants[f"s{s}"] = lambda m=mode, b=bk, s=s: \
+                    run_sharded_workload(m, b, s, cap, kr, batch, read_pct,
+                                         rounds=rounds)
+            for name, fn in variants.items():
+                r = fn()
+                payload["results"][f"{mode}_{bk}_{name}"] = {
+                    "ops_per_sec": r.ops_per_sec,
+                    "psync_per_op": r.psync_per_op,
+                    "psync_per_update": r.psync_per_update,
+                }
+                rows.append(fmt_row(f"bench_shard_{mode}_{bk}_{name}", r,
+                                    {"ops_per_sec": f"{r.ops_per_sec:.0f}"}))
     res = payload["results"]
     payload["speedup"] = {
         "mode": "soft",
-        "s8_vs_s1": res[f"soft_{BACKEND}_s8"]["ops_per_sec"]
-        / res[f"soft_{BACKEND}_s1"]["ops_per_sec"],
-        "s8_vs_flat": res[f"soft_{BACKEND}_s8"]["ops_per_sec"]
-        / res[f"soft_{BACKEND}_flat"]["ops_per_sec"],
+        "s8_vs_s1": {bk: res[f"soft_{bk}_s8"]["ops_per_sec"]
+                     / res[f"soft_{bk}_s1"]["ops_per_sec"]
+                     for bk in backends},
+        "s8_vs_flat": {bk: res[f"soft_{bk}_s8"]["ops_per_sec"]
+                       / res[f"soft_{bk}_flat"]["ops_per_sec"]
+                       for bk in backends},
     }
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
-    sp = payload["speedup"]
-    rows.append(f"bench_shard_json,0.000,path={out};"
-                f"s8_vs_s1={sp['s8_vs_s1']:.2f}x;"
-                f"s8_vs_flat={sp['s8_vs_flat']:.2f}x")
+    sp = payload["speedup"]["s8_vs_s1"]
+    rows.append(f"bench_shard_json,0.000,path={out};" + ";".join(
+        f"{bk}_s8_vs_s1={sp[bk]:.2f}x" for bk in backends))
     return rows
 
 

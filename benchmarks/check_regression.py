@@ -1,0 +1,72 @@
+"""CI perf-regression guard over ``BENCH_shard.json``.
+
+Fails (exit 1) when the sharded-runtime benchmark falls below the committed
+floors in ``benchmarks/baseline_floor.json``:
+
+  * ``speedup.s8_vs_s1`` for the bucket backend (the Pallas production
+    path) below ``min_bucket_s8_vs_s1`` -- the shard axis must keep paying;
+  * flat soft-bucket ops/sec more than ``flat_tolerance`` (default 20%)
+    below the committed ``soft_bucket_flat_ops_per_sec`` floor -- the
+    unsharded hot path must not silently regress.
+
+The floor value is a conservative committed baseline, not the best
+measurement: CI machines vary, so the tolerance absorbs machine noise while
+still catching order-of-magnitude regressions (e.g. a vectorized path
+falling back to a sequential loop).
+
+Usage: python -m benchmarks.check_regression [--bench BENCH_shard.json]
+                                             [--floor benchmarks/baseline_floor.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(bench: dict, floor: dict) -> list:
+    failures = []
+    s8 = bench["speedup"]["s8_vs_s1"]
+    # pre-sweep payloads carried a bare float for the bucket backend
+    if isinstance(s8, dict) and "bucket" not in s8:
+        return ["bucket results missing from the benchmark payload (was "
+                "bench_shard run with a --backend sweep that excludes "
+                "'bucket'?)"]
+    bucket_s8 = s8["bucket"] if isinstance(s8, dict) else s8
+    if bucket_s8 < floor["min_bucket_s8_vs_s1"]:
+        failures.append(
+            f"bucket s8_vs_s1 {bucket_s8:.2f}x < required "
+            f"{floor['min_bucket_s8_vs_s1']:.2f}x")
+    flat = bench["results"]["soft_bucket_flat"]["ops_per_sec"]
+    min_flat = floor["soft_bucket_flat_ops_per_sec"] \
+        * (1.0 - floor.get("flat_tolerance", 0.2))
+    if flat < min_flat:
+        failures.append(
+            f"flat soft-bucket {flat:.0f} ops/s < floor {min_flat:.0f} "
+            f"({floor['soft_bucket_flat_ops_per_sec']:.0f} - "
+            f"{100 * floor.get('flat_tolerance', 0.2):.0f}%)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="BENCH_shard.json")
+    ap.add_argument("--floor", default="benchmarks/baseline_floor.json")
+    args = ap.parse_args()
+    with open(args.bench) as f:
+        bench = json.load(f)
+    with open(args.floor) as f:
+        floor = json.load(f)
+    failures = check(bench, floor)
+    for msg in failures:
+        print(f"PERF REGRESSION: {msg}", file=sys.stderr)
+    if not failures:
+        s8 = bench["speedup"]["s8_vs_s1"]
+        print(f"perf guard OK: speedups={s8}, flat soft-bucket "
+              f"{bench['results']['soft_bucket_flat']['ops_per_sec']:.0f} "
+              "ops/s")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

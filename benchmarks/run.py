@@ -16,10 +16,21 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
-    ap.add_argument("--backend", default="probe",
-                    choices=("probe", "scan", "bucket"),
-                    help="index backend for the hash experiments")
+    ap.add_argument("--backend", default=None,
+                    help="index backend for the hash experiments (probe | "
+                         "scan | bucket; default: each suite's own, "
+                         "bench_shard sweeps all three).  bench_shard "
+                         "accepts a comma-separated sweep, e.g. "
+                         "probe,scan,bucket")
     args = ap.parse_args()
+    if args.backend:
+        valid = {"probe", "scan", "bucket"}
+        names = args.backend.split(",")
+        if set(names) - valid:
+            ap.error(f"--backend must be one or more of {sorted(valid)}")
+        if len(names) > 1 and args.only != "bench_shard":
+            ap.error("a comma-separated --backend sweep is only supported "
+                     "with --only bench_shard")
 
     from benchmarks import (scalability, key_range, read_pct,
                             psync_counts, recovery, checkpoint_bench,
@@ -40,7 +51,7 @@ def main() -> None:
         if only and name not in only:
             continue
         kwargs = {"quick": args.quick}
-        if "backend" in inspect.signature(mod.run).parameters:
+        if args.backend and "backend" in inspect.signature(mod.run).parameters:
             kwargs["backend"] = args.backend
         for row in mod.run(**kwargs):
             print(row)

@@ -19,12 +19,25 @@ differ in *when they psync* (the paper's entire performance story):
             the link write (2 psyncs per update: node + pointer), the
             baseline the paper beats by up to 3.3x.
 
+The mutation hot path is a two-stage **plan/commit pipeline** (DESIGN.md
+§2a): a mode-independent planning stage (``plan_insert`` / ``plan_remove``:
+lookup join, in-batch dedup, phase classification, batch-wide allocation
+ranks) followed by vectorized commit kernels -- the node-pool scatter plus
+ONE backend-owned ``index_update`` hook over :class:`IndexFields`
+(``table_claim`` / ``table_release`` for the linear-probe table,
+``bucket_insert`` / ``bucket_remove`` for the bucket planes).  The retired
+per-lane sequential writers survive as ``_table_write_ref`` /
+``_table_delete_ref``: they DEFINE the lane-order linearization that the
+vectorized kernels reproduce bit-for-bit, and they remain the recovery
+bulk-build path.
+
 The volatile-index layer is pluggable (DESIGN.md §4): every operation body
-is an ``_*_impl`` function parameterized by a ``lookup_fn`` and an optional
-``active`` lane mask, so :mod:`repro.core.engine` can swap index backends
-(including the Pallas ``hash_probe`` kernel) and fuse a mixed contains /
-insert / remove batch into one jitted dispatch.  The jitted wrappers in this
-module keep the legacy ``index="probe"|"scan"`` string interface.
+is an ``_*_impl`` function parameterized by a ``lookup_fn``, an optional
+``active`` lane mask, and the ``index_update`` commit hook, so
+:mod:`repro.core.engine` can swap index backends (including the Pallas
+``hash_probe`` kernel) and fuse a mixed contains / insert / remove batch
+into one jitted dispatch.  The jitted wrappers in this module keep the
+legacy ``index="probe"|"scan"`` string interface.
 """
 from __future__ import annotations
 
@@ -119,37 +132,99 @@ MAX_PROBE = 128
 
 LookupFn = Callable[[SetState, jax.Array], jax.Array]
 
-# Incremental index-maintenance hook (DESIGN.md §5): called by the op bodies
-# with the five bucket-index fields plus (keys, node_ids, do-lane mask) and
-# returns the updated fields plus an overflow latch.  ``None`` (probe/scan)
-# means the op bodies touch none of the bucket fields -- those backends pay
-# nothing for the bucket machinery.
-IndexUpdateFn = Callable[..., Tuple[jax.Array, jax.Array, jax.Array,
-                                    jax.Array, jax.Array, jax.Array]]
+
+class IndexFields(NamedTuple):
+    """The volatile-index slice of :class:`SetState` -- everything a backend
+    may maintain on the mutation hot path.  The commit stage hands this
+    bundle to the backend's ``update_index`` hook (DESIGN.md §2a): probe
+    owns ``table``, bucket owns the bucket/stash planes, scan owns nothing.
+    """
+    table: jax.Array     # i32[T] linear-probe table (probe backend)
+    bkeys: jax.Array     # i32[NB, W] bucket way keys (bucket backend)
+    bids: jax.Array      # i32[NB, W] bucket way node ids
+    skeys: jax.Array     # i32[S] dense-stash keys
+    sids: jax.Array      # i32[S] dense-stash node ids
+    stash_n: jax.Array   # i32[] stash-occupancy latch
+
+
+def index_fields(state: SetState) -> IndexFields:
+    return IndexFields(state.table, state.bkeys, state.bids, state.skeys,
+                       state.sids, state.stash_n)
+
+
+# Index commit hook (DESIGN.md §2a): ``(fields, keys, node_ids, do-mask) ->
+# (fields, overflow)``.  The op bodies never touch an index structure
+# directly -- each backend updates exactly the fields it owns, and ``None``
+# (the scan backend) means the mutation commits with no index maintenance
+# at all.
+IndexUpdateFn = Callable[[IndexFields, jax.Array, jax.Array, jax.Array],
+                         Tuple[IndexFields, jax.Array]]
+
+
+class MutationPlan(NamedTuple):
+    """Planning-stage output shared by link-free/SOFT/log-free (DESIGN.md
+    §2a): lookup join, in-batch dedup, phase classification and (for
+    inserts) batch-wide allocation ranks.  The mode-specific psync
+    accounting and the commit scatters are all computed FROM the plan; the
+    plan itself is mode-independent."""
+    existing: jax.Array   # i32[B] node id from the lookup, EMPTY when absent
+    found: jax.Array      # bool[B] existing >= 0
+    win: jax.Array        # bool[B] lanes that commit the mutation
+    lose_dup: jax.Array   # bool[B] active lanes that lost the in-batch race
+    targets: jax.Array    # i32[B] node id committed (alloc slot / existing)
+    count: jax.Array      # i32[]  number of winning lanes
+    overflow: jax.Array   # bool[] node-pool exhaustion (insert plans only)
+
+
+# Width of the adaptive probe-window chunks.  Vectorized probe searches
+# (lookup / claim / release) gather (B, PROBE_CHUNK) slots per round and
+# only continue past the chunk for the lanes whose chain is still
+# unresolved -- at healthy load factors (<= 0.25 with the default
+# table_factor) chains are 1-2 slots long, so one chunk almost always
+# settles the whole batch and the gather volume drops by max_probe/chunk
+# versus materializing the full window.
+PROBE_CHUNK = 16
 
 
 def _lookup_probe(state: SetState, keys: jax.Array,
                   max_probe: int = MAX_PROBE) -> jax.Array:
-    """Vectorized linear-probe lookup -> node id or EMPTY per lane."""
+    """Vectorized windowed linear-probe lookup -> node id or EMPTY per lane.
+
+    Chunked (B, C) window gathers replace the former P-step depth
+    ``fori_loop``; the first match-or-EMPTY event in probe order decides,
+    exactly as the sequential probe did."""
     t = state.table.shape[0]
     h = (hash32(keys) & jnp.uint32(t - 1)).astype(jnp.int32)
     b = keys.shape[0]
+    c = min(PROBE_CHUNK, max_probe)
+    dwin = jnp.arange(c, dtype=jnp.int32)[None, :]
+    n = state.keys.shape[0]
 
-    def body(d, carry):
-        found, done = carry
-        pos = (h + d) & (t - 1)
-        ids = state.table[pos]
-        is_empty = ids == EMPTY
+    def unresolved(carry):
+        off, _, done = carry
+        return (off < max_probe) & ~done.all()
+
+    def scan_chunk(carry):
+        off, found, done = carry
+        pos = (h[:, None] + off + dwin) & (t - 1)
+        ids = state.table[pos]                               # (B, C)
+        valid = (off + dwin) < max_probe
         live = ids >= 0
-        k = state.keys[jnp.clip(ids, 0, state.keys.shape[0] - 1)]
-        match = live & (k == keys)
-        found = jnp.where(match & ~done, ids, found)
-        done = done | match | is_empty
-        return found, done
+        k = state.keys[jnp.clip(ids, 0, n - 1)]
+        match = live & (k == keys[:, None]) & valid
+        event = match | ((ids == EMPTY) & valid)
+        any_e = event.any(axis=1)
+        fd = jnp.argmax(event, axis=1)
+        first_is_match = jnp.take_along_axis(match, fd[:, None],
+                                             axis=1)[:, 0]
+        hit = jnp.take_along_axis(ids, fd[:, None], axis=1)[:, 0]
+        found = jnp.where(~done & any_e & first_is_match, hit, found)
+        return off + c, found, done | any_e
 
-    found, _ = lax.fori_loop(0, max_probe, body,
-                             (jnp.full((b,), EMPTY, jnp.int32),
-                              jnp.zeros((b,), jnp.bool_)))
+    _, found, _ = lax.while_loop(
+        unresolved, scan_chunk,
+        (jnp.int32(0), jnp.full((b,), EMPTY, jnp.int32),
+         jnp.zeros((b,), jnp.bool_)))
     return found
 
 
@@ -167,15 +242,18 @@ def _lookup(state: SetState, keys: jax.Array, index: str) -> jax.Array:
     return _lookup_scan(state, keys) if index == "scan" else _lookup_probe(state, keys)
 
 
-def _table_write(table: jax.Array, keys: jax.Array, ids: jax.Array,
-                 do: jax.Array, max_probe: int = MAX_PROBE
-                 ) -> Tuple[jax.Array, jax.Array]:
-    """Insert (key -> id) pairs for lanes with do[i]; first EMPTY/TOMB slot.
+def _table_write_ref(table: jax.Array, keys: jax.Array, ids: jax.Array,
+                     do: jax.Array, max_probe: int = MAX_PROBE
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """REFERENCE sequential writer (retired from the hot path): insert
+    (key -> id) pairs for lanes with do[i] into the first EMPTY/TOMB slot.
 
     The fori_loop over lanes *is* the linearization order: lane i's write
     happens before lane j's for i < j, the deterministic stand-in for the
-    winning CAS order.
-    """
+    winning CAS order.  The vectorized :func:`table_claim` reproduces this
+    table bit-for-bit (pinned by tests/test_plan_commit.py); the reference
+    remains the recovery bulk-build path, where the claim kernel's O(B^2)
+    conflict matrix would not fit at B == pool size."""
     t = table.shape[0]
     h = (hash32(keys) & jnp.uint32(t - 1)).astype(jnp.int32)
     b = keys.shape[0]
@@ -200,9 +278,13 @@ def _table_write(table: jax.Array, keys: jax.Array, ids: jax.Array,
     return lax.fori_loop(0, b, lane, (table, jnp.bool_(False)))
 
 
-def _table_delete(table: jax.Array, keys: jax.Array, ids: jax.Array,
-                  do: jax.Array, max_probe: int = MAX_PROBE) -> jax.Array:
-    """Tombstone the slot holding id for lanes with do[i] (the trim)."""
+def _table_delete_ref(table: jax.Array, keys: jax.Array, ids: jax.Array,
+                      do: jax.Array, max_probe: int = MAX_PROBE) -> jax.Array:
+    """REFERENCE sequential deleter (retired from the hot path): tombstone
+    the slot holding id for lanes with do[i] (the trim).  The vectorized
+    :func:`table_release` is exactly equivalent because delete searches are
+    mutually independent (TOMB writes never create the EMPTY stop condition
+    and never match another lane's id)."""
     t = table.shape[0]
     h = (hash32(keys) & jnp.uint32(t - 1)).astype(jnp.int32)
     b = keys.shape[0]
@@ -224,6 +306,129 @@ def _table_delete(table: jax.Array, keys: jax.Array, ids: jax.Array,
             jnp.where(ok, TOMB, table[jnp.clip(pos, 0)]))
 
     return lax.fori_loop(0, b, lane, table)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized commit kernels (DESIGN.md §2a).  These replace the per-lane
+# fori_loop writers above on the mutation hot path while reproducing the
+# same lane-order linearization bit-for-bit.
+# ---------------------------------------------------------------------------
+
+
+def table_claim(table: jax.Array, keys: jax.Array, ids: jax.Array,
+                do: jax.Array, max_probe: int = MAX_PROBE
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Parallel first-free slot claiming, equivalent to the sequential
+    ``_table_write_ref`` linearization.
+
+    Every pending lane scans a (B, C) chunk of its probe window for its
+    candidate -- the first free (EMPTY or TOMB) slot -- advancing its chunk
+    frontier only while the chain stays unresolved; conflicts are resolved
+    by lane rank and the round's winners land in ONE scatter.  A lane i
+    commits only when no earlier pending lane j could still be pushed onto
+    i's candidate slot -- and because the candidate is free, j can reach it
+    iff j's probe window covers it (a covering contender's own first-free
+    slot is necessarily at or before a free slot; slots are only ever
+    consumed within a call, so this stays true across rounds).
+    That guard makes each round's commits exactly the placements the
+    sequential writer would have made, and each round the lowest pending
+    lane commits, fails, or advances its frontier, so the loop terminates
+    (1 round in the uncontended common case, ~2-3 under benchmark load).
+    Returns (table, overflow)."""
+    t = table.shape[0]
+    h = (hash32(keys) & jnp.uint32(t - 1)).astype(jnp.int32)
+    b = keys.shape[0]
+    c = min(PROBE_CHUNK, max_probe)
+    dwin = jnp.arange(c, dtype=jnp.int32)[None, :]
+    lane = jnp.arange(b, dtype=jnp.int32)
+    j_before_i = lane[:, None] < lane[None, :]             # [j, i]: j < i
+
+    def pending_left(carry):
+        _, pending, _, _ = carry
+        return pending.any()
+
+    def round_(carry):
+        table, pending, off, ovf = carry
+        doff = off[:, None] + dwin
+        pos = (h[:, None] + doff) & (t - 1)
+        free = (table[pos] < 0) & (doff < max_probe)       # (B, C)
+        has = free.any(axis=1)
+        d = off + jnp.argmax(free, axis=1).astype(jnp.int32)
+        s = (h + d) & (t - 1)                              # candidate slot
+        exhausted = pending & ~has & (off + c >= max_probe)
+        cand = pending & has
+        contender = pending & ~exhausted
+        # reach[j, i]: could contender lane j still land on lane i's slot?
+        # s_i is free, so any contender whose probe window covers s_i has
+        # its own first-free at or before it -- coverage alone decides.
+        dj = (s[None, :] - h[:, None]) & (t - 1)
+        reach = dj < max_probe
+        blocked = (contender[:, None] & j_before_i & reach).any(axis=0)
+        commit = cand & ~blocked
+        table = table.at[jnp.where(commit, s, t)].set(ids, mode="drop")
+        off = jnp.where(pending & ~has & ~exhausted, off + c, off)
+        return table, contender & ~commit, off, ovf | exhausted.any()
+
+    table, _, _, ovf = lax.while_loop(
+        pending_left, round_,
+        (table, do, jnp.zeros((b,), jnp.int32), jnp.bool_(False)))
+    return table, ovf
+
+
+def table_release(table: jax.Array, keys: jax.Array, ids: jax.Array,
+                  do: jax.Array, max_probe: int = MAX_PROBE) -> jax.Array:
+    """Parallel tombstoning, equivalent to ``_table_delete_ref``: chunked
+    (B, C) window gathers find each lane's first hit-or-EMPTY event, and
+    all trims land in ONE scatter against the pre-call table (delete
+    searches never interact -- see the ref)."""
+    t = table.shape[0]
+    h = (hash32(keys) & jnp.uint32(t - 1)).astype(jnp.int32)
+    b = keys.shape[0]
+    c = min(PROBE_CHUNK, max_probe)
+    dwin = jnp.arange(c, dtype=jnp.int32)[None, :]
+
+    def unresolved(carry):
+        off, _, done = carry
+        return (off < max_probe) & ~done.all()
+
+    def scan_chunk(carry):
+        off, found_pos, done = carry
+        doff = off + dwin
+        pos = (h[:, None] + doff) & (t - 1)
+        window = table[pos]                                # (B, C)
+        valid = doff < max_probe
+        hit = (window == ids[:, None]) & valid
+        event = hit | ((window == EMPTY) & valid)
+        any_e = event.any(axis=1)
+        fd = jnp.argmax(event, axis=1)
+        first_is_hit = jnp.take_along_axis(hit, fd[:, None], axis=1)[:, 0]
+        s = (h + off + fd.astype(jnp.int32)) & (t - 1)
+        found_pos = jnp.where(~done & any_e & first_is_hit, s, found_pos)
+        return off + c, found_pos, done | any_e
+
+    _, found_pos, _ = lax.while_loop(
+        unresolved, scan_chunk,
+        (jnp.int32(0), jnp.full((b,), -1, jnp.int32), ~do))
+    ok = do & (found_pos >= 0)
+    return table.at[jnp.where(ok, found_pos, t)].set(TOMB, mode="drop")
+
+
+def probe_index_update(phase: str, max_probe: int = MAX_PROBE
+                       ) -> IndexUpdateFn:
+    """The linear-probe table's commit hook: claim on insert, release on
+    remove.  Bound by ``ProbeBackend.update_index`` (and by the legacy
+    string-index wrappers below), so probe-table maintenance lives behind
+    the same protocol hook as the bucket index -- the op bodies no longer
+    special-case any index structure."""
+    if phase == "insert":
+        def update(f: IndexFields, keys, ids, do):
+            table, ovf = table_claim(f.table, keys, ids, do, max_probe)
+            return f._replace(table=table), ovf
+    else:
+        def update(f: IndexFields, keys, ids, do):
+            table = table_release(f.table, keys, ids, do, max_probe)
+            return f._replace(table=table), jnp.bool_(False)
+    return update
 
 
 def _alloc(state: SetState, need: jax.Array, count: jax.Array):
@@ -264,9 +469,51 @@ def _dedup_first(keys: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Operation bodies.  Each takes a lookup_fn (the pluggable index backend) and
-# an optional active-lane mask; inactive lanes are complete no-ops (no state
-# change, no psync, no n_ops, result False).  The jitted public wrappers
+# Planning stage (DESIGN.md §2a).  One mode-independent pass computes
+# everything the commit stage and the psync accounting consume: the lookup
+# join, the in-batch dedup (lane-priority CAS), phase classification
+# (win / lose_dup), and -- for inserts -- the batch-wide allocation ranks.
+# ---------------------------------------------------------------------------
+
+
+def plan_insert(state: SetState, keys: jax.Array, active: jax.Array,
+                existing: jax.Array) -> MutationPlan:
+    """Insert plan: winners are first-lanes of absent keys, capped by the
+    free-node supply (rank-based ``_alloc``); ``targets`` carries the
+    claimed node slot per winning lane."""
+    found = existing >= 0
+    first = _dedup_first(keys, active)
+    win = first & ~found
+    lose_dup = active & ~first & ~found
+    count = jnp.sum(win.astype(jnp.int32))
+    slots, ovf = _alloc(state, win, count)
+    win = win & (slots >= 0)                     # drop lanes on pool overflow
+    count = jnp.sum(win.astype(jnp.int32))
+    return MutationPlan(existing=existing, found=found, win=win,
+                        lose_dup=lose_dup, targets=slots, count=count,
+                        overflow=ovf)
+
+
+def plan_remove(state: SetState, keys: jax.Array, active: jax.Array,
+                existing: jax.Array) -> MutationPlan:
+    """Remove plan: winners are first-lanes of present keys; ``targets`` is
+    the node id being retired (the lookup result)."""
+    found = existing >= 0
+    first = _dedup_first(keys, active)
+    win = first & found
+    lose_dup = active & ~first & found
+    count = jnp.sum(win.astype(jnp.int32))
+    return MutationPlan(existing=existing, found=found, win=win,
+                        lose_dup=lose_dup, targets=existing, count=count,
+                        overflow=jnp.bool_(False))
+
+
+# ---------------------------------------------------------------------------
+# Operation bodies: the shared plan/commit pipeline (DESIGN.md §2a).  Each
+# body takes a lookup_fn (the pluggable index backend), an optional active
+# lane mask (inactive lanes are complete no-ops: no state change, no psync,
+# no n_ops, result False) and ONE ``index_update`` commit hook -- the op
+# bodies never special-case any index structure.  The jitted public wrappers
 # below bind lookup_fn to the legacy string index and active to all-lanes.
 # ---------------------------------------------------------------------------
 
@@ -274,54 +521,41 @@ def _dedup_first(keys: jax.Array,
 def _insert_impl(state: SetState, keys: jax.Array, values: jax.Array, *,
                  mode: str, lookup_fn: LookupFn,
                  active: Optional[jax.Array] = None,
-                 max_probe: int = MAX_PROBE,
                  existing: Optional[jax.Array] = None,
-                 index_insert: Optional[IndexUpdateFn] = None,
-                 maintain_table: bool = True
+                 index_update: Optional[IndexUpdateFn] = None
                  ) -> Tuple[SetState, jax.Array]:
     """``existing`` lets a caller reuse a lookup already performed against a
     state whose index fields (keys/cur/table/buckets) are unchanged --
     lookups never read the flushed/psync accounting a contains phase mutates.
-    ``index_insert`` is the backend's incremental bucket-index hook;
-    ``maintain_table`` is False for backends whose lookups never read the
-    linear-probe table."""
+    ``index_update`` is the backend's index commit hook
+    (``backend.update_index(spec, "insert")``); None commits the node pool
+    with no index maintenance."""
     assert mode in MODES
     b = keys.shape[0]
     if active is None:
         active = jnp.ones((b,), jnp.bool_)
     if existing is None:
         existing = lookup_fn(state, keys)
-    found = existing >= 0
-    first = _dedup_first(keys, active)
-    win = first & ~found                       # lanes that insert a new node
-    lose_dup = active & ~first & ~found        # lanes that lose the in-batch race
 
-    count = jnp.sum(win.astype(jnp.int32))
-    slots, ovf = _alloc(state, win, count)
+    # --- plan: dedup, classification, allocation ranks ---------------------
+    plan = plan_insert(state, keys, active, existing)
+    win, slots, count = plan.win, plan.targets, plan.count
     n = state.keys.shape[0]
-    win = win & (slots >= 0)                        # drop lanes on overflow
-    count = jnp.sum(win.astype(jnp.int32))
     sidx = jnp.where(win, slots, n)                 # OOB scatter => dropped
 
+    # --- commit: node pool, then the backend's index fields ----------------
     keys_a = state.keys.at[sidx].set(keys, mode="drop")
     vals_a = state.values.at[sidx].set(values, mode="drop")
     # flipV1 -> payload -> makeValid, then psync: cur=VALID, flushed=VALID.
     cur = state.cur.at[sidx].set(VALID, mode="drop")
     flushed = state.flushed.at[sidx].set(VALID, mode="drop")
 
-    if maintain_table:
-        table, tovf = _table_write(state.table, keys, slots, win, max_probe)
-    else:
-        table, tovf = state.table, jnp.bool_(False)
-
-    bkeys, bids, skeys, sids, stash_n = (state.bkeys, state.bids, state.skeys,
-                                         state.sids, state.stash_n)
+    fields = index_fields(state)
     iovf = jnp.bool_(False)
-    if index_insert is not None:
-        bkeys, bids, skeys, sids, stash_n, iovf = index_insert(
-            bkeys, bids, skeys, sids, stash_n, keys, slots, win)
+    if index_update is not None:
+        fields, iovf = index_update(fields, keys, slots, win)
 
-    # --- psync accounting --------------------------------------------------
+    # --- psync accounting (mode-specific, computed from the plan) ----------
     new_psync = count                                        # FLUSH_INSERT / PNode.create
     if mode == "logfree":
         new_psync = new_psync * 2                            # + pointer persist
@@ -330,42 +564,44 @@ def _insert_impl(state: SetState, keys: jax.Array, values: jax.Array, *,
         # false (Listing 4 lines 6-8).  The insert-flush flag elides the psync
         # when already flushed; only pre-existing *unflushed* nodes pay.
         eidx = jnp.clip(existing, 0, state.keys.shape[0] - 1)
-        helper = active & found & (state.flushed[eidx] < VALID) \
+        helper = active & plan.found & (state.flushed[eidx] < VALID) \
             & (state.cur[eidx] == VALID)
         flushed = flushed.at[jnp.where(helper, eidx, 0)].max(
             jnp.where(helper, VALID, 0))
         # Contention model: duplicate lanes re-flush the winner (flag race).
         new_psync = new_psync + jnp.sum(helper.astype(jnp.int32)) \
-            + jnp.sum(lose_dup.astype(jnp.int32))
+            + jnp.sum(plan.lose_dup.astype(jnp.int32))
     if mode == "logfree":
-        new_psync = new_psync + 2 * jnp.sum(lose_dup.astype(jnp.int32))
+        new_psync = new_psync + 2 * jnp.sum(plan.lose_dup.astype(jnp.int32))
 
-    ok = win
     return SetState(
-        keys=keys_a, values=vals_a, cur=cur, flushed=flushed, table=table,
-        bkeys=bkeys, bids=bids, skeys=skeys, sids=sids, stash_n=stash_n,
+        keys=keys_a, values=vals_a, cur=cur, flushed=flushed,
+        table=fields.table, bkeys=fields.bkeys, bids=fields.bids,
+        skeys=fields.skeys, sids=fields.sids, stash_n=fields.stash_n,
         n_psync=_bump(state.n_psync, new_psync),
         n_ops=_bump(state.n_ops, jnp.sum(active.astype(jnp.int32))),
         size=state.size + count,
-        overflow=state.overflow | ovf | tovf | iovf,
-    ), ok
+        overflow=state.overflow | plan.overflow | iovf,
+    ), win
 
 
 def _remove_impl(state: SetState, keys: jax.Array, *, mode: str,
                  lookup_fn: LookupFn, active: Optional[jax.Array] = None,
-                 max_probe: int = MAX_PROBE,
-                 index_remove: Optional[IndexUpdateFn] = None,
-                 maintain_table: bool = True) -> Tuple[SetState, jax.Array]:
+                 existing: Optional[jax.Array] = None,
+                 index_update: Optional[IndexUpdateFn] = None
+                 ) -> Tuple[SetState, jax.Array]:
     assert mode in MODES
     b = keys.shape[0]
     if active is None:
         active = jnp.ones((b,), jnp.bool_)
-    existing = lookup_fn(state, keys)
-    found = existing >= 0
-    first = _dedup_first(keys, active)
-    win = first & found
-    lose_dup = active & ~first & found
+    if existing is None:
+        existing = lookup_fn(state, keys)
 
+    # --- plan --------------------------------------------------------------
+    plan = plan_remove(state, keys, active, existing)
+    win, count = plan.win, plan.count
+
+    # --- commit ------------------------------------------------------------
     eidx = jnp.clip(existing, 0, state.keys.shape[0] - 1)
     # mark (INTEND_TO_DELETE -> destroy psync -> DELETED); flushed follows
     # because every algorithm persists the delete before returning.
@@ -374,28 +610,22 @@ def _remove_impl(state: SetState, keys: jax.Array, *, mode: str,
     cur = jnp.where(mark, DELETED, state.cur)
     flushed = jnp.where(mark, DELETED, state.flushed)
 
-    if maintain_table:
-        table = _table_delete(state.table, keys, existing, win, max_probe)
-    else:
-        table = state.table
+    fields = index_fields(state)
+    if index_update is not None:
+        fields, _ = index_update(fields, keys, existing, win)
 
-    bkeys, bids, skeys, sids, stash_n = (state.bkeys, state.bids, state.skeys,
-                                         state.sids, state.stash_n)
-    if index_remove is not None:
-        bkeys, bids, skeys, sids, stash_n, _ = index_remove(
-            bkeys, bids, skeys, sids, stash_n, keys, existing, win)
-
-    count = jnp.sum(win.astype(jnp.int32))
+    # --- psync accounting --------------------------------------------------
     new_psync = count                                        # FLUSH_DELETE / PNode.destroy
     if mode == "logfree":
-        new_psync = new_psync * 2 + 2 * jnp.sum(lose_dup.astype(jnp.int32))
+        new_psync = new_psync * 2 \
+            + 2 * jnp.sum(plan.lose_dup.astype(jnp.int32))
     if mode == "linkfree":
-        new_psync = new_psync + jnp.sum(lose_dup.astype(jnp.int32))
+        new_psync = new_psync + jnp.sum(plan.lose_dup.astype(jnp.int32))
 
     return SetState(
         keys=state.keys, values=state.values, cur=cur, flushed=flushed,
-        table=table,
-        bkeys=bkeys, bids=bids, skeys=skeys, sids=sids, stash_n=stash_n,
+        table=fields.table, bkeys=fields.bkeys, bids=fields.bids,
+        skeys=fields.skeys, sids=fields.sids, stash_n=fields.stash_n,
         n_psync=_bump(state.n_psync, new_psync),
         n_ops=_bump(state.n_ops, jnp.sum(active.astype(jnp.int32))),
         size=state.size - count,
@@ -447,9 +677,12 @@ def _contains_impl(state: SetState, keys: jax.Array, *, mode: str,
 def insert_batch(state: SetState, keys: jax.Array, values: jax.Array,
                  mode: str = "soft", index: str = "probe"
                  ) -> Tuple[SetState, jax.Array]:
-    """Batched insert; returns success per lane (False == key already present)."""
+    """Batched insert; returns success per lane (False == key already present).
+    The legacy surface always maintains the probe table (scan lookups simply
+    never read it), matching the historical behavior."""
     return _insert_impl(state, keys, values, mode=mode,
-                        lookup_fn=lambda s, k: _lookup(s, k, index))
+                        lookup_fn=lambda s, k: _lookup(s, k, index),
+                        index_update=probe_index_update("insert"))
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "index"))
@@ -458,7 +691,8 @@ def remove_batch(state: SetState, keys: jax.Array,
                  ) -> Tuple[SetState, jax.Array]:
     """Batched remove; success == key was present and this lane won the race."""
     return _remove_impl(state, keys, mode=mode,
-                        lookup_fn=lambda s, k: _lookup(s, k, index))
+                        lookup_fn=lambda s, k: _lookup(s, k, index),
+                        index_update=probe_index_update("remove"))
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "index"))
@@ -496,7 +730,9 @@ def _rebuild_from_member(member: jax.Array, keys: jax.Array,
     bulk index build (``build_buckets`` for the bucket backend) -- the ONLY
     place outside state construction where the bucket index is built from
     scratch; ``build_table`` is False for backends that never read the
-    linear-probe table."""
+    linear-probe table.  The bulk table build stays on the sequential
+    reference writer: at B == pool size the claim kernel's O(B^2) conflict
+    matrix would dwarf the rebuild it replaces."""
     n = keys.shape[0]
     state = make_state(n, table_factor, n_buckets, bucket_width, stash_size)
     cur = jnp.where(member, VALID, FREE)
@@ -508,8 +744,8 @@ def _rebuild_from_member(member: jax.Array, keys: jax.Array,
     )
     if build_table:
         ids = jnp.arange(n, dtype=jnp.int32)
-        table, ovf = _table_write(state.table, state.keys, ids, member,
-                                  max_probe)
+        table, ovf = _table_write_ref(state.table, state.keys, ids, member,
+                                      max_probe)
         state = state._replace(table=table, overflow=state.overflow | ovf)
     if index_init is not None:
         state = index_init(state)

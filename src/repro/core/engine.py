@@ -73,7 +73,15 @@ class SetSpec:
     stash_size    bucket backend: dense-stash slots S for per-bucket
                   overflow spill (overflowing past S latches
                   ``state.overflow``)
-    use_pallas    bucket backend: run the Pallas kernels (else jnp refs)
+    use_pallas    run the Pallas kernels where the backend has them: the
+                  bucket lookup/recovery path, and the probe backend's
+                  windowed table lookup (else pure-lax references)
+    probe_pallas_lookup
+                  probe backend: route kernel-eligible lookups through the
+                  Pallas ``table_lookup`` one-hot-matmul path.  None (the
+                  default) auto-selects by platform -- the MXU route on
+                  TPU, the chunked lax window gather elsewhere (on CPU the
+                  matmul sweep is strictly more work than the gather)
     interpret     pallas_call interpret mode (True for CPU / debugging)
     """
     capacity: int
@@ -85,6 +93,7 @@ class SetSpec:
     bucket_width: int = 8
     stash_size: int = 128
     use_pallas: bool = True
+    probe_pallas_lookup: Optional[bool] = None
     interpret: bool = True
 
     def __post_init__(self):
@@ -120,9 +129,10 @@ class IndexBackend(Protocol):
     Register with :func:`register_backend`; implementations must be
     pure/jittable with ``spec`` static."""
     name: str
-    # False => the op bodies skip linear-probe-table maintenance entirely
-    # (the backend's lookups never read ``SetState.table``).
-    needs_probe_table: bool
+    # True => recovery bulk-builds the linear-probe table for this backend
+    # (its lookups read ``SetState.table``).  Hot-path maintenance is NOT
+    # keyed on this flag: it lives entirely in ``update_index``.
+    builds_probe_table: bool
 
     def lookup(self, spec: SetSpec, state: SetState,
                keys: jax.Array) -> jax.Array:
@@ -146,8 +156,12 @@ class IndexBackend(Protocol):
 
     def update_index(self, spec: SetSpec, phase: str
                      ) -> Optional[DS.IndexUpdateFn]:
-        """Incremental maintenance hook for ``phase`` ("insert"|"remove"),
-        or None when the op bodies should leave the bucket fields alone."""
+        """The index commit hook for ``phase`` ("insert"|"remove"): a
+        function ``(IndexFields, keys, node_ids, do) -> (IndexFields,
+        overflow)`` updating exactly the index structures this backend owns
+        (probe table, bucket planes, ...), or None when the mutation commits
+        with no index maintenance.  This is the ONLY path by which the op
+        bodies touch any volatile-index structure (DESIGN.md §2a)."""
         ...
 
 
@@ -165,12 +179,34 @@ class _NullIndexMixin:
 
 
 class ProbeBackend(_NullIndexMixin):
-    """The paper's hash-set experiments: linear probing over SetState.table."""
+    """The paper's hash-set experiments: linear probing over SetState.table.
+
+    Reads route through the tiled Pallas ``hash_probe`` kernel when
+    selected (``probe_pallas_lookup``; auto == TPU) and the batch geometry
+    allows it (lane-aligned batch, f32-exact node ids): each lane's probe
+    window is gathered once into a (B, P) plane pair and becomes its own
+    bucket row, so probe shares the MXU one-hot matmul path the bucket
+    backend uses.  Otherwise the chunked pure-lax window lookup runs --
+    exact first-match semantics at a fraction of the gather volume.
+    Writes commit through :func:`DS.probe_index_update` (``table_claim`` /
+    ``table_release``)."""
     name = "probe"
-    needs_probe_table = True
+    builds_probe_table = True
 
     def lookup(self, spec, state, keys):
+        b = keys.shape[0]
+        use = spec.probe_pallas_lookup
+        if use is None:                # auto: MXU route on TPU only
+            use = spec.use_pallas and jax.default_backend() == "tpu"
+        if (use and spec.capacity < _F32_EXACT
+                and b % 8 == 0 and (b <= 4096 or b % 4096 == 0)):
+            return hp_ops.table_lookup(state.table, state.keys, keys,
+                                       max_probe=spec.max_probe,
+                                       interpret=spec.interpret)
         return DS._lookup_probe(state, keys, max_probe=spec.max_probe)
+
+    def update_index(self, spec, phase):
+        return DS.probe_index_update(phase, spec.max_probe)
 
     def recover_scan(self, spec, persisted):
         return rs_ops.recovery_scan(persisted, use_pallas=False)
@@ -179,7 +215,7 @@ class ProbeBackend(_NullIndexMixin):
 class ScanBackend(_NullIndexMixin):
     """The paper's list experiments: cost dominated by full traversal."""
     name = "scan"
-    needs_probe_table = False      # _lookup_scan reads cur/keys directly
+    builds_probe_table = False     # _lookup_scan reads cur/keys directly
 
     def lookup(self, spec, state, keys):
         return DS._lookup_scan(state, keys)
@@ -204,7 +240,7 @@ class BucketBackend:
     streaming ``recovery_scan`` Pallas kernel.
     """
     name = "bucket"
-    needs_probe_table = False
+    builds_probe_table = False
 
     def lookup(self, spec, state, keys):
         found = hp_ops.lookup(state.bkeys, state.bids, keys,
@@ -238,8 +274,15 @@ class BucketBackend:
                               overflow=state.overflow | ovf)
 
     def update_index(self, spec, phase):
-        return hp_ops.bucket_insert if phase == "insert" \
+        fn = hp_ops.bucket_insert if phase == "insert" \
             else hp_ops.bucket_remove
+
+        def update(f: DS.IndexFields, keys, ids, do):
+            bkeys, bids, skeys, sids, stash_n, ovf = fn(
+                f.bkeys, f.bids, f.skeys, f.sids, f.stash_n, keys, ids, do)
+            return f._replace(bkeys=bkeys, bids=bids, skeys=skeys,
+                              sids=sids, stash_n=stash_n), ovf
+        return update
 
 
 BACKENDS: Dict[str, IndexBackend] = {}
@@ -291,9 +334,7 @@ def insert(state: SetState, keys: jax.Array, values: jax.Array, *,
     backend = get_backend(spec.backend)
     return DS._insert_impl(state, keys, values, mode=spec.mode,
                            lookup_fn=_lookup_fn(spec),
-                           index_insert=backend.update_index(spec, "insert"),
-                           maintain_table=backend.needs_probe_table,
-                           max_probe=spec.max_probe)
+                           index_update=backend.update_index(spec, "insert"))
 
 
 @functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
@@ -302,9 +343,7 @@ def remove(state: SetState, keys: jax.Array, *,
     backend = get_backend(spec.backend)
     return DS._remove_impl(state, keys, mode=spec.mode,
                            lookup_fn=_lookup_fn(spec),
-                           index_remove=backend.update_index(spec, "remove"),
-                           maintain_table=backend.needs_probe_table,
-                           max_probe=spec.max_probe)
+                           index_update=backend.update_index(spec, "remove"))
 
 
 @functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
@@ -340,13 +379,14 @@ def get(state: SetState, keys: jax.Array, *, spec: SetSpec,
 def apply_batch_impl(state: SetState, ops: jax.Array, keys: jax.Array,
                      values: jax.Array, *, spec: SetSpec
                      ) -> Tuple[SetState, jax.Array]:
-    """Unjitted mixed-batch body: one contains->insert->remove phase sweep.
-    Pure and vmappable -- :mod:`repro.core.shard` maps it over the stacked
-    shard axis in ONE dispatch.  Lanes whose op code matches no phase
+    """Unjitted mixed-batch body: one contains->insert->remove phase sweep,
+    each phase a plan/commit pipeline pass (DESIGN.md §2a).  Pure and
+    vmappable -- :mod:`repro.core.shard` maps it over the stacked shard axis
+    in ONE dispatch, so every backend's plan matrices and commit scatters
+    shrink by ~S under sharding.  Lanes whose op code matches no phase
     (OP_NOP) are exact no-ops."""
     backend = get_backend(spec.backend)
     lookup_fn = _lookup_fn(spec)
-    mt = backend.needs_probe_table
     is_c = ops == OP_CONTAINS
     is_i = ops == OP_INSERT
     is_r = ops == OP_REMOVE
@@ -356,12 +396,11 @@ def apply_batch_impl(state: SetState, ops: jax.Array, keys: jax.Array,
     # index fields, so its lookup is still valid for the insert phase
     state, r_i = DS._insert_impl(
         state, keys, values, mode=spec.mode, lookup_fn=lookup_fn,
-        active=is_i, max_probe=spec.max_probe, existing=ids,
-        index_insert=backend.update_index(spec, "insert"), maintain_table=mt)
+        active=is_i, existing=ids,
+        index_update=backend.update_index(spec, "insert"))
     state, r_r = DS._remove_impl(
         state, keys, mode=spec.mode, lookup_fn=lookup_fn, active=is_r,
-        max_probe=spec.max_probe,
-        index_remove=backend.update_index(spec, "remove"), maintain_table=mt)
+        index_update=backend.update_index(spec, "remove"))
     return state, jnp.where(is_i, r_i, jnp.where(is_r, r_r, r_c))
 
 
@@ -391,7 +430,7 @@ def recover_impl(persisted: jax.Array, keys: jax.Array, values: jax.Array,
     state = DS._rebuild_from_member(
         member, keys, values, spec.table_factor, spec.max_probe,
         n_buckets=nb, bucket_width=w, stash_size=s,
-        build_table=backend.needs_probe_table,
+        build_table=backend.builds_probe_table,
         index_init=functools.partial(backend.init_index, spec))
     return state, hist
 

@@ -94,7 +94,8 @@ def bucket_insert(bkeys, bids, skeys, sids, stash_n, keys, ids, do):
     stash slot when the bucket is full.
 
     Vectorized sequential-equivalent: lane order is the linearization order
-    (exactly as in ``_table_write``), and since ways/slots are only consumed
+    (exactly as in ``_table_write_ref``), and since ways/slots are only
+    consumed
     here, the lane of in-bucket claim-rank r deterministically receives the
     (r+1)-th free way -- one O(B^2) rank computation plus ONE scatter per
     plane instead of a B-step sequential loop (the former apply_batch
@@ -151,6 +152,41 @@ def bucket_remove(bkeys, bids, skeys, sids, stash_n, keys, ids, do):
     skeys = skeys.at[ts].set(0, mode="drop")
     stash_n = stash_n - jnp.sum(in_stash.astype(jnp.int32))
     return bkeys, bids, skeys, sids, stash_n, jnp.bool_(False)
+
+
+@functools.partial(jax.jit, static_argnames=("max_probe", "interpret"))
+def table_lookup(table: jax.Array, pool_keys: jax.Array, q_keys: jax.Array,
+                 *, max_probe: int = 128, interpret: bool = True
+                 ) -> jax.Array:
+    """Linear-probe-table lookup routed through the tiled ``probe_pallas``
+    MXU kernel (the probe backend's read path, DESIGN.md §2a).
+
+    Each lane's probe window is gathered ONCE into (B, P) key/id planes and
+    becomes its own bucket row (q_bucket == lane index), so the probe
+    backend shares the one-hot-matmul kernel the bucket backend uses.  The
+    linear-probing insert invariant (an entry is always placed at or before
+    the first EMPTY of its chain, and EMPTY slots are never created by
+    operation -- deletes write TOMB) makes the kernel's any-match join equal
+    to the sequential first-match-before-EMPTY result.  Requires B divisible
+    by 8 (and by 4096 past 4096 rows) and node ids within the f32-exact
+    budget; callers fall back to the lax window lookup otherwise."""
+    t = table.shape[0]
+    b = q_keys.shape[0]
+    n = pool_keys.shape[0]
+    assert n < (1 << 24), "pool size exceeds the f32-exact node-id budget"
+    h = (hash32(q_keys) & jnp.uint32(t - 1)).astype(jnp.int32)
+    pos = (h[:, None]
+           + jnp.arange(max_probe, dtype=jnp.int32)[None, :]) & (t - 1)
+    ids = table[pos]                                       # (B, P) id plane
+    live = ids >= 0
+    wkeys = jnp.where(live, pool_keys[jnp.clip(ids, 0, n - 1)], 0)
+    wids = jnp.where(live, ids, EMPTY)                     # mask TOMB too
+    rows = jnp.arange(b, dtype=jnp.int32)                  # lane i -> row i
+    bq = 128 if b % 128 == 0 else (8 if b % 8 == 0 else 1)
+    nbt = b if b <= 4096 else 4096
+    assert b % nbt == 0, (b, nbt)
+    return probe_pallas(wkeys, wids, rows, q_keys, bq=bq, nbt=nbt,
+                        interpret=interpret)
 
 
 def lookup(bucket_keys, bucket_ids, q_keys, *, use_pallas=True,
