@@ -19,9 +19,19 @@ vectorized probe backend is so fast flat (~20x the bucket path) that the
 canonical batch is dispatch-bound and its tracked ratio hovers ~1x -- see
 DESIGN.md §6 for why that is the expected shape, not a regression.
 
+When the sweep includes the bucket backend, a ``router`` section
+additionally compares Router v2 (two-stage, adaptive lane budget -- the
+default) against the v1 single-stage ``lane_factor`` router at the
+canonical soft/bucket/S=8 point, on uniform random keysets AND on
+balanced keysets (exact B/S occupancy per shard, where the adaptive
+budget picks L == B/S instead of v1's 2*B/S); the ``v2_vs_v1`` ratios are
+floored by ``min_router_v2_vs_v1`` in the CI guard.
+
 ``--quick`` KEEPS the canonical geometry -- sharding pays off at scale, so
 shrinking capacity/batch would measure fixed dispatch overhead instead of
-the acceptance point -- and trims rounds and the mode sweep (soft only).
+the acceptance point -- and trims the mode sweep to soft only (rounds stay
+at 20: the CI-floored ratios sat in a +-25% noise band at 5 rounds, and
+prefill, not rounds, dominates the runtime).
 """
 from __future__ import annotations
 
@@ -30,18 +40,32 @@ import platform
 
 import jax
 
-from benchmarks.common import run_workload, run_sharded_workload, fmt_row
+from benchmarks.common import (balanced_keygen, run_workload,
+                               run_sharded_workload, fmt_row)
 
 MODES = ("soft", "linkfree", "logfree")
 BACKENDS = ("probe", "scan", "bucket")
 SHARDS = (1, 8)
+
+# Router v2 vs v1 at the canonical point (soft/bucket/S=8): "uniform" is
+# the standard random keyset (adaptive budget ~= the v1 2*B/S there);
+# "balanced" is the healthy-skew shape (exact B/S occupancy) where the
+# adaptive budget halves the routed lane grid v1 pads to.
+ROUTER_VARIANTS = (
+    ("v1_uniform", {"router": "v1"}, None),
+    ("v2_uniform", {}, None),
+    ("v1_balanced", {"router": "v1"}, balanced_keygen),
+    ("v2_balanced", {}, balanced_keygen),
+)
 
 OUT = "BENCH_shard.json"
 
 
 def run(quick: bool = False, out: str = OUT, backend: str = None):
     cap, kr, batch, read_pct = 65536, 65536, 1024, 90   # the canonical point
-    rounds = 5 if quick else 10
+    # rounds are cheap next to prefill; 20 keeps the CI-floored ratios out
+    # of the +-25% noise band that 5-round runs showed
+    rounds = 20
     modes = ("soft",) if quick else MODES
     backends = tuple(backend.split(",")) if backend else BACKENDS
     payload = {
@@ -81,12 +105,33 @@ def run(quick: bool = False, out: str = OUT, backend: str = None):
                        / res[f"soft_{bk}_flat"]["ops_per_sec"]
                        for bk in backends},
     }
+    # Router v2 vs v1 section (canonical soft/bucket/S=8 point)
+    if "bucket" in backends:
+        router = {}
+        for name, kw, keygen in ROUTER_VARIANTS:
+            r = run_sharded_workload("soft", "bucket", 8, cap, kr, batch,
+                                     read_pct, rounds=rounds,
+                                     shard_kwargs=kw, keygen=keygen)
+            router[name] = {"ops_per_sec": r.ops_per_sec,
+                            "psync_per_update": r.psync_per_update}
+            rows.append(fmt_row(f"bench_shard_router_{name}", r,
+                                {"ops_per_sec": f"{r.ops_per_sec:.0f}"}))
+        router["v2_vs_v1"] = {
+            kind: router[f"v2_{kind}"]["ops_per_sec"]
+            / router[f"v1_{kind}"]["ops_per_sec"]
+            for kind in ("uniform", "balanced")}
+        payload["router"] = router
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
     sp = payload["speedup"]["s8_vs_s1"]
+    extra = ""
+    if "router" in payload:
+        vv = payload["router"]["v2_vs_v1"]
+        extra = (f";router_v2_vs_v1_uniform={vv['uniform']:.2f}x"
+                 f";router_v2_vs_v1_balanced={vv['balanced']:.2f}x")
     rows.append(f"bench_shard_json,0.000,path={out};" + ";".join(
-        f"{bk}_s8_vs_s1={sp[bk]:.2f}x" for bk in backends))
+        f"{bk}_s8_vs_s1={sp[bk]:.2f}x" for bk in backends) + extra)
     return rows
 
 

@@ -3,11 +3,17 @@
 Fails (exit 1) when the sharded-runtime benchmark falls below the committed
 floors in ``benchmarks/baseline_floor.json``:
 
-  * ``speedup.s8_vs_s1`` for the bucket backend (the Pallas production
-    path) below ``min_bucket_s8_vs_s1`` -- the shard axis must keep paying;
+  * ``speedup.s8_vs_s1`` PER BACKEND below its ``min_<backend>_s8_vs_s1``
+    floor -- the shard axis must keep paying on every backend the ROADMAP
+    quotes (bucket is the Pallas production path; scan's traversal cost
+    shrinks ~linearly with the shard axis; probe is dispatch-bound on CPU
+    so its floor only guards against a collapse, see DESIGN.md §6);
   * flat soft-bucket ops/sec more than ``flat_tolerance`` (default 20%)
     below the committed ``soft_bucket_flat_ops_per_sec`` floor -- the
-    unsharded hot path must not silently regress.
+    unsharded hot path must not silently regress;
+  * ``router.v2_vs_v1`` below ``min_router_v2_vs_v1`` (when both are
+    present): the two-stage adaptive router must not lose to the v1
+    single-stage router at the canonical point.
 
 The floor value is a conservative committed baseline, not the best
 measurement: CI machines vary, so the tolerance absorbs machine noise while
@@ -27,24 +33,50 @@ import sys
 def check(bench: dict, floor: dict) -> list:
     failures = []
     s8 = bench["speedup"]["s8_vs_s1"]
-    # pre-sweep payloads carried a bare float for the bucket backend
-    if isinstance(s8, dict) and "bucket" not in s8:
-        return ["bucket results missing from the benchmark payload (was "
+    if not isinstance(s8, dict):     # pre-sweep payloads: bare bucket float
+        s8 = {"bucket": s8}
+    for backend in ("bucket", "scan", "probe"):
+        key = f"min_{backend}_s8_vs_s1"
+        if key not in floor:
+            continue
+        if backend not in s8:
+            failures.append(
+                f"{backend} results missing from the benchmark payload "
+                f"(was bench_shard run with a --backend sweep that "
+                f"excludes '{backend}'?)")
+            continue
+        if s8[backend] < floor[key]:
+            failures.append(
+                f"{backend} s8_vs_s1 {s8[backend]:.2f}x < required "
+                f"{floor[key]:.2f}x")
+    flat_row = bench["results"].get("soft_bucket_flat")
+    if flat_row is None:
+        failures.append(
+            "soft_bucket_flat missing from the benchmark payload (was "
+            "bench_shard run with a --backend sweep that excludes "
+            "'bucket'?)")
+    else:
+        flat = flat_row["ops_per_sec"]
+        min_flat = floor["soft_bucket_flat_ops_per_sec"] \
+            * (1.0 - floor.get("flat_tolerance", 0.2))
+        if flat < min_flat:
+            failures.append(
+                f"flat soft-bucket {flat:.0f} ops/s < floor {min_flat:.0f} "
+                f"({floor['soft_bucket_flat_ops_per_sec']:.0f} - "
+                f"{100 * floor.get('flat_tolerance', 0.2):.0f}%)")
+    if "min_router_v2_vs_v1" in floor:
+        if "router" not in bench:
+            failures.append(
+                "router section missing from the benchmark payload, so "
+                "the min_router_v2_vs_v1 floor was never evaluated (was "
                 "bench_shard run with a --backend sweep that excludes "
-                "'bucket'?)"]
-    bucket_s8 = s8["bucket"] if isinstance(s8, dict) else s8
-    if bucket_s8 < floor["min_bucket_s8_vs_s1"]:
-        failures.append(
-            f"bucket s8_vs_s1 {bucket_s8:.2f}x < required "
-            f"{floor['min_bucket_s8_vs_s1']:.2f}x")
-    flat = bench["results"]["soft_bucket_flat"]["ops_per_sec"]
-    min_flat = floor["soft_bucket_flat_ops_per_sec"] \
-        * (1.0 - floor.get("flat_tolerance", 0.2))
-    if flat < min_flat:
-        failures.append(
-            f"flat soft-bucket {flat:.0f} ops/s < floor {min_flat:.0f} "
-            f"({floor['soft_bucket_flat_ops_per_sec']:.0f} - "
-            f"{100 * floor.get('flat_tolerance', 0.2):.0f}%)")
+                "'bucket', or from a pre-Router-v2 payload?)")
+        else:
+            for kind, ratio in bench["router"]["v2_vs_v1"].items():
+                if ratio < floor["min_router_v2_vs_v1"]:
+                    failures.append(
+                        f"router v2_vs_v1[{kind}] {ratio:.2f}x < required "
+                        f"{floor['min_router_v2_vs_v1']:.2f}x")
     return failures
 
 
@@ -62,9 +94,10 @@ def main() -> int:
         print(f"PERF REGRESSION: {msg}", file=sys.stderr)
     if not failures:
         s8 = bench["speedup"]["s8_vs_s1"]
+        flat = bench["results"].get("soft_bucket_flat", {}).get(
+            "ops_per_sec", float("nan"))
         print(f"perf guard OK: speedups={s8}, flat soft-bucket "
-              f"{bench['results']['soft_bucket_flat']['ops_per_sec']:.0f} "
-              "ops/s")
+              f"{flat:.0f} ops/s")
     return 1 if failures else 0
 
 

@@ -27,6 +27,7 @@ from repro.core import engine as E
 from repro.core import shard as SH
 from repro.core.engine import (SetSpec, OP_CONTAINS, OP_INSERT, OP_REMOVE)
 from repro.core.shard import ShardSpec
+from repro.core.shard import np_shard_of
 
 
 @dataclass
@@ -98,38 +99,85 @@ def run_workload(mode: str, backend: str, capacity: int, key_range: int,
                   rounds=rounds)
 
 
+def balanced_keygen(rng, key_range: int, batch: int, n: int,
+                    sspec: ShardSpec):
+    """``n`` keysets whose per-shard occupancy is EXACTLY batch/S -- the
+    healthy-skew shape where the v2 adaptive budget picks L == B/S while
+    the v1 ``lane_factor=2`` budget stays at 2*B/S."""
+    s = sspec.n_shards
+    per = batch // s
+    assert per * s == batch, "balanced keysets need S | batch"
+    out = []
+    for _ in range(n):
+        parts = []
+        while len(parts) < s:
+            cand = rng.integers(0, key_range, 4 * batch).astype(np.int32)
+            sid = np_shard_of(cand, s)
+            parts = [cand[sid == sh][:per] for sh in range(s)]
+            parts = parts if all(len(p) == per for p in parts) else []
+        ks = np.concatenate(parts)
+        rng.shuffle(ks)
+        out.append(ks)
+    return out
+
+
 def run_sharded_workload(mode: str, backend: str, n_shards: int,
                          capacity: int, key_range: int, batch: int,
                          read_pct: int, rounds: int = 30, seed: int = 0,
-                         prefill: bool = True) -> Result:
-    """The same mixed workload through :mod:`repro.core.shard`: one routed,
-    vmapped dispatch per round over ``n_shards`` shards at ``capacity``
-    TOTAL (equal-capacity comparison against :func:`run_workload`)."""
+                         prefill: bool = True, shard_kwargs: dict = None,
+                         keygen=None) -> Result:
+    """The same mixed workload through :mod:`repro.core.shard`: one routed
+    dispatch per round over ``n_shards`` shards at ``capacity`` TOTAL
+    (equal-capacity comparison against :func:`run_workload`), through the
+    spec's router -- v2 two-stage adaptive by default; ``shard_kwargs``
+    selects e.g. ``router="v1"`` or a placement.  ``keygen(rng,
+    key_range, batch, n, sspec)`` overrides the per-round keysets (e.g.
+    :func:`balanced_keygen`).  v2 rounds INCLUDE the host stage-1 cost --
+    the honest serving shape."""
     rng = np.random.default_rng(seed)
     sspec = ShardSpec(base=SetSpec(capacity=capacity, mode=mode,
-                                   backend=backend), n_shards=n_shards)
+                                   backend=backend), n_shards=n_shards,
+                      **(shard_kwargs or {}))
     state = SH.make_state(sspec)
+    ins = np.full((batch,), OP_INSERT, np.int32)
     if prefill:
         keys = rng.choice(key_range, key_range // 2, replace=False)
         for i in range(0, len(keys), batch):
             chunk = np.resize(keys[i:i + batch], batch).astype(np.int32)
-            state, _, _ = SH.insert(state, jnp.asarray(chunk),
-                                    jnp.asarray(chunk), sspec=sspec)
+            state, _, _, _ = SH.dispatch_batch(state, ins, chunk, chunk,
+                                               sspec=sspec)
 
     ops = _mixed_ops(batch, read_pct)
     n_upd = int(np.sum(np.asarray(ops) != OP_CONTAINS))
-    keysets = _keysets(rng, key_range, batch, rounds)
+    ks = keygen(rng, key_range, batch, rounds + 1, sspec) if keygen else \
+        [rng.integers(0, key_range, batch).astype(np.int32)
+         for _ in range(rounds + 1)]
+    if sspec.router == "v1":     # v1 consumes device arrays; pre-transfer
+        ops = jnp.asarray(np.asarray(ops))
+        ks = [jax.device_put(jnp.asarray(k)) for k in ks]
+        jax.block_until_ready(ks)
+    else:                        # v2 stage 1 consumes host arrays
+        ops = np.asarray(ops)
 
-    k = keysets[0]
-    state, _, _ = SH.apply_batch(state, ops, k, k, sspec=sspec)
+    # v1 keeps its PR-3 timed loop on the jitted entrypoint (dropped stays
+    # a device scalar -- NO per-round host sync); the v2 loop's per-round
+    # host stage 1 + drop count IS the measured serving shape.
+    if sspec.router == "v1":
+        step = lambda st, k: SH.apply_batch(st, ops, k, k, sspec=sspec)
+    else:
+        step = lambda st, k: SH.dispatch_batch(st, ops, k, k,
+                                               sspec=sspec)[:3]
+
+    k = ks[0]
+    state, _, _ = step(state, k)
     jax.block_until_ready(state.keys)
     p0 = int(state.n_psync.sum())
     o0 = int(state.n_ops.sum())
     drops = []
     t0 = time.perf_counter()
-    for k in keysets[1:]:
-        state, _, dropped = SH.apply_batch(state, ops, k, k, sspec=sspec)
-        drops.append(dropped)          # device scalar; no sync until the end
+    for k in ks[1:]:
+        state, _, dropped = step(state, k)
+        drops.append(dropped)
     jax.block_until_ready(state.keys)
     dt = time.perf_counter() - t0
     d_ops = int(state.n_ops.sum()) - o0

@@ -14,4 +14,6 @@ from repro.core.engine import (SetSpec, DurableMap, DurableSet, IndexBackend,
                                OP_REMOVE, OP_NOP)
 from repro.core.shard import (ShardSpec, ShardedDurableMap, shard_of,
                               np_shard_of)
+from repro.core.router import (PLACEMENTS, adaptive_lane_budget,
+                               budget_candidates, np_storage_rows)
 from repro.core.oracle import OracleSet

@@ -20,23 +20,34 @@ Layout:
                 axis: every leaf of the per-shard state gains dim0 == S.
                 Probe/scan/bucket backends (including the Pallas kernels)
                 run under the stack unchanged.
-  routing       :func:`route` is a jit-compatible sort/segment router: lanes
-                are stably argsorted by shard id (stability preserves lane
-                priority, the deterministic CAS stand-in of DESIGN.md §2),
-                positioned within their shard segment, and scattered into an
-                (S, L) lane grid whose unused slots carry ``OP_NOP`` (an
-                exact no-op).  L is the *lane budget* -- a static function
-                of the batch size that shrinks the sequential per-lane loops
-                from B to ~B/S iterations (the sharded speedup).  A shard
-                receiving more than L lanes *drops* the excess (result
-                False, no side effect) and reports the count -- detectable,
-                never silent; small batches default to L == B (never drops).
+  routing       router="v2" (default): the TWO-STAGE device-local router of
+                :mod:`repro.core.router` -- stage 1 splits the batch into
+                per-device sub-batches host-side (so no all-gather exists
+                under ``shard_map``) and stage 2 sort/segment-routes each
+                device's lanes into its (S/D, L) local grid with an
+                ADAPTIVE lane budget L = next_pow2(realized max shard
+                occupancy); drops happen only under an explicit
+                ``max_lane_budget`` cap.  router="v1" keeps the legacy
+                single-stage :func:`route`: the global (S, L) grid with the
+                static L ~ lane_factor*B/S budget, dropping a shard's
+                excess lanes past L (result False, counted, warned once --
+                detectable, never silent).  On any trace where neither
+                router drops (every within-budget workload) both execute
+                the same lanes in the same per-shard order: results,
+                state, and psync counters are bit-identical
+                (tests/test_router_v2.py).  Under budget pressure the
+                DROP SETS differ by design: v1's static budget sheds
+                skew that uncapped v2 widens L to absorb.
+  placement     when S >> D devices, ``ShardSpec.placement`` selects which
+                shards co-locate: "contiguous" blocks (storage row ==
+                global shard id) or "strided" interleaving -- a pure
+                storage-row permutation (DESIGN.md §6).
   dispatch      ALL shards execute in ONE vmapped ``apply_batch_impl``
-                dispatch.  With ``use_shard_map=True`` and more than one
-                device, the vmapped call is additionally partitioned over a
-                1-D device mesh via ``shard_map`` (each device owns S/D
-                shards); semantics are identical because shards never
-                communicate.
+                dispatch (v2: one per device group).  With
+                ``use_shard_map=True`` and more than one device, the
+                per-device program is partitioned over a 1-D device mesh
+                via ``shard_map`` (each device owns S/D shards); semantics
+                are identical because shards never communicate.
   recovery      ``crash_and_recover`` draws an independent adversary ``u``
                 per shard and rebuilds every volatile index in one vmapped
                 ``recover_impl`` dispatch (the Pallas ``recovery_scan``
@@ -61,6 +72,7 @@ from jax.sharding import PartitionSpec
 
 from repro.core import durable_set as DS
 from repro.core import engine as E
+from repro.core import router as RT
 from repro.core.durable_set import SetState
 from repro.core.engine import (OP_CONTAINS, OP_INSERT, OP_NOP, OP_REMOVE,
                                SetSpec)
@@ -76,28 +88,72 @@ class ShardSpec:
                     knob -- mode, backend, geometry -- applies per shard)
     n_shards        shard count S (power of two: routing takes the high
                     ``log2(S)`` bits of ``hash32``)
-    lane_factor     head-room multiplier sizing the per-shard lane budget
-                    L(B) = next_pow2(lane_factor * ceil(B / S))
+    router          "v2" (default): the two-stage device-local router with
+                    adaptive lane budgets (:mod:`repro.core.router`);
+                    "v1": the legacy single-stage global sort/segment
+                    router with the static ``lane_factor`` budget
+    placement       shard->device storage order when S >> D: "contiguous"
+                    (device d owns the shard-id block, storage row ==
+                    global shard id -- the v1 layout) or "strided"
+                    (device d owns shards {d, d+D, d+2D, ...})
+    lane_factor     v1 only: head-room multiplier sizing the per-shard
+                    lane budget L(B) = next_pow2(lane_factor * ceil(B/S))
     min_lane_budget lower clamp on L; batches of B <= min_lane_budget get
                     L == B, i.e. routing can never drop a lane
+    max_lane_budget v2 only: upper cap on the adaptive budget (0 = uncapped,
+                    the default -- the adaptive router then NEVER drops).
+                    With a cap, a shard receiving more lanes drops the
+                    excess (counted + warned, like v1 past its budget)
+    n_device_groups v2 only: explicit stage-1 group count D (0 = auto:
+                    the mesh size under ``use_shard_map``, else 1).  A
+                    non-mesh group count is dispatched with vmap -- the
+                    logical two-stage split for tests/CI on one device
     use_shard_map   partition the vmapped dispatch over a 1-D device mesh
                     when more than one device is available (opt-in; a
                     single-device process silently stays on plain vmap)
     """
     base: SetSpec
     n_shards: int = 8
+    router: str = "v2"
+    placement: str = "contiguous"
     lane_factor: int = 2
     min_lane_budget: int = 32
+    max_lane_budget: int = 0
+    n_device_groups: int = 0
     use_shard_map: bool = False
 
     def __post_init__(self):
         s = self.n_shards
         if s < 1 or (s & (s - 1)) != 0:
             raise ValueError(f"n_shards must be a power of two, got {s}")
+        if self.router not in ("v1", "v2"):
+            raise ValueError(f"router must be 'v1' or 'v2', got "
+                             f"{self.router!r}")
+        if self.placement not in RT.PLACEMENTS:
+            raise ValueError(f"placement must be one of {RT.PLACEMENTS}, "
+                             f"got {self.placement!r}")
         if self.lane_factor < 1:
             raise ValueError("lane_factor must be >= 1")
         if self.min_lane_budget < 1:
             raise ValueError("min_lane_budget must be >= 1")
+        if self.max_lane_budget < 0:
+            raise ValueError("max_lane_budget must be >= 0 (0 = uncapped)")
+        g = self.n_device_groups
+        if g < 0 or (g & (g - 1)) != 0:
+            raise ValueError("n_device_groups must be 0 (auto) or a power "
+                             f"of two, got {g}")
+        if g > s:
+            raise ValueError(f"n_device_groups ({g}) cannot exceed "
+                             f"n_shards ({s})")
+        if self.router == "v1":
+            # fail loudly instead of silently ignoring v2-only knobs
+            for knob, neutral in (("placement", "contiguous"),
+                                  ("max_lane_budget", 0),
+                                  ("n_device_groups", 0)):
+                if getattr(self, knob) != neutral:
+                    raise ValueError(
+                        f"{knob} is a v2-only knob; the v1 router ignores "
+                        f"it (got {knob}={getattr(self, knob)!r})")
 
     def shard_spec(self) -> SetSpec:
         """The per-shard SetSpec: total capacity split evenly (ceil)."""
@@ -202,13 +258,7 @@ def make_state(sspec: ShardSpec) -> SetState:
 def _mesh_devices(sspec: ShardSpec) -> int:
     """Devices the shard axis can split over: the largest power-of-two
     divisor of n_shards that the process has devices for (1 == plain vmap)."""
-    if not sspec.use_shard_map:
-        return 1
-    d = sspec.n_shards
-    avail = jax.device_count()
-    while d > 1 and d > avail:
-        d //= 2
-    return d
+    return RT.mesh_devices(sspec)
 
 def _dispatch(vfn, sspec: ShardSpec):
     """Wrap a shard-axis-vmapped function for execution: identity on a
@@ -292,6 +342,42 @@ def get(state: SetState, keys: jax.Array, *, sspec: ShardSpec,
 
 
 # ---------------------------------------------------------------------------
+# Router dispatch: v2 two-stage (default) vs the legacy v1 single stage.
+# ---------------------------------------------------------------------------
+
+
+def dispatch_batch(state: SetState, ops, keys, values, *, sspec: ShardSpec
+                   ) -> Tuple[SetState, jax.Array, int, Optional[
+                       RT.RoutePlan]]:
+    """Route + execute a mixed batch through the spec's router.  Returns
+    ``(state, per-lane results, dropped count, stage-1 plan-or-None)``.
+    The v2 path runs stage 1 host-side (no all-gather under shard_map)
+    and picks the adaptive lane budget; v1 is the single-stage global
+    router.  Results/state/psyncs are bit-identical between the two
+    (``tests/test_router_v2.py``)."""
+    if sspec.router == "v1":
+        state, res, dropped = apply_batch(
+            state, jnp.asarray(ops, jnp.int32), jnp.asarray(keys, jnp.int32),
+            jnp.asarray(values, jnp.int32), sspec=sspec)
+        return state, res, int(dropped), None
+    state, res, dropped, plan = RT.apply_batch_v2(state, ops, keys, values,
+                                                  sspec=sspec)
+    return state, res, dropped, plan
+
+
+def dispatch_get(state: SetState, keys, *, sspec: ShardSpec,
+                 default: int = 0):
+    """Value lookup through the spec's router; returns ``(state, values,
+    present, dropped, plan-or-None)``."""
+    if sspec.router == "v1":
+        state, vals, present, dropped = get(
+            state, jnp.asarray(keys, jnp.int32), sspec=sspec,
+            default=default)
+        return state, vals, present, int(dropped), None
+    return RT.get_v2(state, keys, sspec=sspec, default=default)
+
+
+# ---------------------------------------------------------------------------
 # Crash + parallel recovery
 # ---------------------------------------------------------------------------
 
@@ -348,8 +434,9 @@ class ShardedDurableMap:
                 if spec_kwargs else spec
         else:
             shard_kw = {k: spec_kwargs.pop(k)
-                        for k in ("lane_factor", "min_lane_budget",
-                                  "use_shard_map")
+                        for k in ("router", "placement", "lane_factor",
+                                  "min_lane_budget", "max_lane_budget",
+                                  "n_device_groups", "use_shard_map")
                         if k in spec_kwargs}
             if spec is None:
                 spec = SetSpec(**spec_kwargs)
@@ -365,11 +452,9 @@ class ShardedDurableMap:
         self.last_recovery_hist = None        # i32[5], summed over shards
         self.last_recovery_hist_shards = None  # i32[S, 5]
         self.router_dropped = 0
+        self.last_route = None                # v2: stage-1 RoutePlan
         self._overflow_warned = False
         self._dropped_warned = False
-
-    # -- plumbing shared with DurableMap ------------------------------------
-    _i32 = staticmethod(E.DurableMap._i32)
 
     @property
     def spec(self) -> SetSpec:
@@ -392,9 +477,12 @@ class ShardedDurableMap:
             self.router_dropped += d
             if not self._dropped_warned:
                 self._dropped_warned = True
+                knob = ("raise or clear max_lane_budget"
+                        if self.sspec.router == "v2" else
+                        "raise lane_factor")
                 warnings.warn(
                     f"ShardedDurableMap dropped {d} lane(s): a shard "
-                    f"received more than the lane budget; raise lane_factor "
+                    f"received more than the lane budget; {knob} "
                     f"or submit smaller batches (sspec={self.sspec})",
                     RuntimeWarning, stacklevel=3)
         if not self._overflow_warned and self.overflowed:
@@ -406,36 +494,53 @@ class ShardedDurableMap:
                 stacklevel=3)
         return res
 
+    def _apply(self, ops, keys, values):
+        self.state, res, dropped, plan = dispatch_batch(
+            self.state, ops, keys, values, sspec=self.sspec)
+        if plan is not None:
+            self.last_route = plan
+        return self._finish(res, dropped)
+
     def insert(self, keys, values=None):
-        keys = self._i32(keys)
-        values = keys if values is None else self._i32(values)
-        self.state, ok, dropped = insert(self.state, keys, values,
-                                         sspec=self.sspec)
-        return self._finish(ok, dropped)
+        keys = np.asarray(keys, np.int32)
+        values = keys if values is None else np.asarray(values, np.int32)
+        return self._apply(np.full(keys.shape, OP_INSERT, np.int32), keys,
+                           values)
 
     def remove(self, keys):
-        self.state, ok, dropped = remove(self.state, self._i32(keys),
-                                         sspec=self.sspec)
-        return self._finish(ok, dropped)
+        keys = np.asarray(keys, np.int32)
+        return self._apply(np.full(keys.shape, OP_REMOVE, np.int32), keys,
+                           keys)
 
     def contains(self, keys):
-        self.state, ok, dropped = contains(self.state, self._i32(keys),
-                                           sspec=self.sspec)
-        return self._finish(ok, dropped)
+        keys = np.asarray(keys, np.int32)
+        return self._apply(np.full(keys.shape, OP_CONTAINS, np.int32), keys,
+                           keys)
 
     def get(self, keys, default: int = 0):
         """Values for present keys, ``default`` otherwise."""
-        self.state, vals, _, dropped = get(self.state, self._i32(keys),
-                                           sspec=self.sspec, default=default)
+        self.state, vals, _, dropped, plan = dispatch_get(
+            self.state, np.asarray(keys, np.int32), sspec=self.sspec,
+            default=default)
+        if plan is not None:
+            self.last_route = plan
         return self._finish(vals, dropped)
 
     def apply(self, ops, keys, values=None):
         """Mixed contains/insert/remove batch; see :func:`apply_batch`."""
-        keys = self._i32(keys)
-        values = keys if values is None else self._i32(values)
-        self.state, res, dropped = apply_batch(self.state, self._i32(ops),
-                                               keys, values, sspec=self.sspec)
-        return self._finish(res, dropped)
+        keys = np.asarray(keys, np.int32)
+        values = keys if values is None else np.asarray(values, np.int32)
+        return self._apply(np.asarray(ops, np.int32), keys, values)
+
+    def precompile(self, batch: int):
+        """Trace/compile the v2 stage-2 program for every lane budget the
+        adaptive chooser can pick for ``batch``-lane batches (exact no-op
+        on the map's contents).  Returns the tuple of budgets compiled."""
+        if self.sspec.router != "v2":
+            return ()
+        self.state, budgets = RT.precompile(self.state, batch,
+                                            sspec=self.sspec)
+        return budgets
 
     def crash_and_recover(self, u=None, seed: int = 0):
         """Crash all shards and rebuild in one vmapped recovery dispatch.

@@ -42,7 +42,18 @@ def main(argv=None):
                     help="registry index backend (bucket = Pallas kernels)")
     ap.add_argument("--shards", type=int, default=1,
                     help="hash-partition the registry over N shards "
-                         "(N > 1 = ShardedDurableMap, one vmapped dispatch)")
+                         "(N > 1 = ShardedDurableMap, one routed dispatch)")
+    ap.add_argument("--router", default="v2", choices=("v1", "v2"),
+                    help="sharded registry router: v2 = two-stage device-"
+                         "local with adaptive lane budgets (default), "
+                         "v1 = legacy single-stage lane_factor router")
+    ap.add_argument("--placement", default="contiguous",
+                    choices=("contiguous", "strided"),
+                    help="shard->device storage order when shards >> "
+                         "devices (v2; see DESIGN.md §6)")
+    ap.add_argument("--max-lane-budget", type=int, default=0,
+                    help="cap the v2 adaptive lane budget (0 = uncapped; "
+                         "a cap drops + counts over-budget lanes)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -53,7 +64,14 @@ def main(argv=None):
 
     spec = SetSpec(capacity=1024, mode="soft", backend=args.backend)
     if args.shards > 1:       # same façade API, hash-partitioned runtime
-        registry = ShardedDurableMap(spec, n_shards=args.shards)
+        registry = ShardedDurableMap(spec, n_shards=args.shards,
+                                     router=args.router,
+                                     placement=args.placement,
+                                     max_lane_budget=args.max_lane_budget)
+        budgets = registry.precompile(args.requests)
+        if budgets:
+            print(f"registry router v2: pre-compiled lane budgets "
+                  f"{budgets} ({args.placement} placement)")
     else:
         registry = DurableMap(spec)
     b = args.requests
@@ -83,6 +101,10 @@ def main(argv=None):
     shard_tag = f" x{args.shards} shards" if args.shards > 1 else ""
     print(f"registry[{args.backend}{shard_tag}]: {len(registry)} completed, "
           f"psyncs={registry.psyncs} (== #requests)")
+    if args.shards > 1 and registry.last_route is not None:
+        print(f"router: lane_budget={registry.last_route.lane_budget} "
+              f"groups={registry.last_route.groups} "
+              f"dropped={registry.router_dropped}")
 
     if args.crash:
         registry.crash_and_recover()
