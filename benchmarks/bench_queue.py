@@ -1,0 +1,143 @@
+"""Canonical durable-queue benchmark with machine-readable output.
+
+Steady-state enqueue/dequeue rounds through the ring (capacity 65536,
+batch 1024 -- the acceptance geometry tracked across PRs) for every psync
+mode, plus the *failed-op* accounting probe the SOFT bound requires:
+full-enqueue and empty-dequeue lanes must pay ZERO psyncs, and recovery
+must issue none.  Writes ``BENCH_queue.json`` (ops/sec, exact
+psync-per-op, fence-bound comparison) so the queue perf trajectory is
+diffable across PRs; CI uploads it as an artifact and
+``benchmarks.check_regression`` guards the committed floor and the
+psync-per-op ceiling.  ``--quick`` shrinks the geometry but keeps the
+JSON schema identical.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Result, fmt_row
+from repro.core import queue as Q
+from repro.core.queue import QueueSpec
+
+MODES = ("soft", "linkfree", "logfree")
+
+OUT = "BENCH_queue.json"
+
+
+def _steady_state(mode: str, capacity: int, batch: int, rounds: int,
+                  seed: int = 0) -> Result:
+    """One round = one full-batch enqueue dispatch + one full-batch
+    dequeue dispatch (2*batch attempted ops), queue oscillating between
+    empty and ``batch`` live -- every op succeeds, so measured
+    psync_per_op must equal the mode's per-success bound EXACTLY."""
+    rng = np.random.default_rng(seed)
+    spec = QueueSpec(capacity=capacity, mode=mode)
+    state = Q.make_state(spec)
+    want = jnp.ones((batch,), jnp.bool_)
+    valsets = [jax.device_put(jnp.asarray(
+        rng.integers(0, 1 << 30, batch), jnp.int32))
+        for _ in range(rounds + 1)]
+    jax.block_until_ready(valsets)
+
+    state, _, _ = Q.enqueue(state, valsets[0], spec=spec)     # warm compile
+    state, _, _, _ = Q.dequeue(state, want, spec=spec)
+    jax.block_until_ready(state.cur)
+    p0, o0 = int(state.n_psync), int(state.n_ops)
+    t0 = time.perf_counter()
+    for v in valsets[1:]:
+        state, _, _ = Q.enqueue(state, v, spec=spec)
+        state, _, _, _ = Q.dequeue(state, want, spec=spec)
+    jax.block_until_ready(state.cur)
+    dt = time.perf_counter() - t0
+    d_ops = int(state.n_ops) - o0
+    d_psync = int(state.n_psync) - p0
+    assert not bool(state.overflow), "ring overflow in benchmark"
+    return Result(ops_per_sec=d_ops / dt,
+                  psync_per_op=d_psync / max(d_ops, 1),
+                  psync_per_update=d_psync / max(d_ops, 1),
+                  rounds=rounds)
+
+
+def _failed_op_psyncs(batch: int) -> int:
+    """Total psyncs charged to FAILED lanes: a 2*batch enqueue into a
+    batch-capacity ring (half rejected full), a 2*batch dequeue (half
+    empty), and a dequeue on empty.  The SOFT discipline says zero."""
+    spec = QueueSpec(capacity=batch)
+    state = Q.make_state(spec)
+    vals = jnp.arange(2 * batch, dtype=jnp.int32)
+    state, ok, _ = Q.enqueue(state, vals, spec=spec)
+    extra = int(state.n_psync) - int(np.asarray(ok).sum())
+    want = jnp.ones((2 * batch,), jnp.bool_)
+    p0 = int(state.n_psync)
+    state, _, ok, _ = Q.dequeue(state, want, spec=spec)
+    extra += int(state.n_psync) - p0 - int(np.asarray(ok).sum())
+    p0 = int(state.n_psync)
+    state, _, ok, _ = Q.dequeue(state, want, spec=spec)       # empty ring
+    assert not bool(np.asarray(ok).any())
+    extra += int(state.n_psync) - p0
+    return extra
+
+
+def _recovery_psyncs(capacity: int, batch: int) -> int:
+    """Psyncs issued by a post-crash rebuild of a half-full ring: the
+    recovery-is-free property (payloads already durable)."""
+    spec = QueueSpec(capacity=capacity)
+    state = Q.make_state(spec)
+    state, _, _ = Q.enqueue(state, jnp.arange(batch, dtype=jnp.int32),
+                            spec=spec)
+    state, _ = Q.crash_and_recover(
+        state, jnp.zeros((capacity,), jnp.float32), spec=spec)
+    return int(state.n_psync)
+
+
+def run(quick: bool = False, out: str = OUT):
+    cap, batch = (4096, 256) if quick else (65536, 1024)
+    rounds = 5 if quick else 10
+    payload = {
+        "config": {"capacity": cap, "batch": batch, "rounds": rounds,
+                   "quick": quick, "jax": jax.__version__,
+                   "device": jax.devices()[0].platform,
+                   "machine": platform.machine()},
+        "results": {},
+    }
+    rows = []
+    for mode in MODES:
+        r = _steady_state(mode, cap, batch, rounds)
+        bound = QueueSpec(capacity=cap, mode=mode).psync_per_success()
+        payload["results"][mode] = {
+            "ops_per_sec": r.ops_per_sec,
+            "psync_per_op": r.psync_per_op,
+            "psync_per_success_bound": bound,
+        }
+        rows.append(fmt_row(f"bench_queue_{mode}", r,
+                            {"ops_per_sec": f"{r.ops_per_sec:.0f}",
+                             "bound": bound}))
+    # the whole performance story in one section: SOFT meets the 1-psync
+    # lower bound, the link-persist (logfree) baseline pays 2x fences
+    payload["fence_bound"] = {
+        "soft_psync_per_op": payload["results"]["soft"]["psync_per_op"],
+        "logfree_psync_per_op":
+            payload["results"]["logfree"]["psync_per_op"],
+        "paper_lower_bound": 1.0,
+    }
+    payload["failed_op_psyncs"] = _failed_op_psyncs(batch)
+    payload["recovery_psyncs"] = _recovery_psyncs(cap, batch)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    rows.append(f"bench_queue_failed_op_psyncs,0.000,"
+                f"count={payload['failed_op_psyncs']}")
+    rows.append(f"bench_queue_recovery_psyncs,0.000,"
+                f"count={payload['recovery_psyncs']}")
+    rows.append(f"bench_queue_json,0.000,path={out}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,4 +1,4 @@
-"""CI perf-regression guard over ``BENCH_shard.json``.
+"""CI perf-regression guard over ``BENCH_shard.json`` + ``BENCH_queue.json``.
 
 Fails (exit 1) when the sharded-runtime benchmark falls below the committed
 floors in ``benchmarks/baseline_floor.json``:
@@ -13,14 +13,22 @@ floors in ``benchmarks/baseline_floor.json``:
     unsharded hot path must not silently regress;
   * ``router.v2_vs_v1`` below ``min_router_v2_vs_v1`` (when both are
     present): the two-stage adaptive router must not lose to the v1
-    single-stage router at the canonical point.
+    single-stage router at the canonical point;
+  * durable-queue (``BENCH_queue.json``, required whenever the floor file
+    carries ``queue_*`` keys): steady-state soft throughput below
+    ``queue_soft_ops_per_sec`` after tolerance, soft ``psync_per_op``
+    above the EXACT ``queue_psync_per_op_ceiling`` (the SOFT bound is 1
+    per successful op -- any excess is a correctness bug surfacing as
+    perf), or any nonzero failed-op / recovery psyncs.
 
 The floor value is a conservative committed baseline, not the best
 measurement: CI machines vary, so the tolerance absorbs machine noise while
 still catching order-of-magnitude regressions (e.g. a vectorized path
-falling back to a sequential loop).
+falling back to a sequential loop).  The psync ceilings are NOT floors:
+they are exact analytical bounds with zero tolerance.
 
 Usage: python -m benchmarks.check_regression [--bench BENCH_shard.json]
+                                             [--bench-queue BENCH_queue.json]
                                              [--floor benchmarks/baseline_floor.json]
 """
 from __future__ import annotations
@@ -80,9 +88,42 @@ def check(bench: dict, floor: dict) -> list:
     return failures
 
 
+def check_queue(bench: dict, floor: dict) -> list:
+    """Guard ``BENCH_queue.json``: a committed throughput floor plus the
+    EXACT psync accounting the queue's SOFT construction promises."""
+    failures = []
+    soft = bench.get("results", {}).get("soft")
+    if soft is None:
+        return ["soft results missing from the queue benchmark payload"]
+    if "queue_soft_ops_per_sec" in floor:
+        min_q = floor["queue_soft_ops_per_sec"] \
+            * (1.0 - floor.get("flat_tolerance", 0.2))
+        if soft["ops_per_sec"] < min_q:
+            failures.append(
+                f"queue soft {soft['ops_per_sec']:.0f} ops/s < floor "
+                f"{min_q:.0f} ({floor['queue_soft_ops_per_sec']:.0f} - "
+                f"{100 * floor.get('flat_tolerance', 0.2):.0f}%)")
+    if "queue_psync_per_op_ceiling" in floor:
+        ceil = floor["queue_psync_per_op_ceiling"]
+        if soft["psync_per_op"] > ceil + 1e-9:     # exact bound, no slack
+            failures.append(
+                f"queue soft psync_per_op {soft['psync_per_op']:.4f} > "
+                f"exact ceiling {ceil} (SOFT bound violated)")
+    if bench.get("failed_op_psyncs", 0) != 0:
+        failures.append(
+            f"queue failed-op psyncs = {bench['failed_op_psyncs']} != 0 "
+            "(failed enqueue/dequeue lanes must pay nothing)")
+    if bench.get("recovery_psyncs", 0) != 0:
+        failures.append(
+            f"queue recovery psyncs = {bench['recovery_psyncs']} != 0 "
+            "(recovery must rebuild from persisted stages for free)")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="BENCH_shard.json")
+    ap.add_argument("--bench-queue", default="BENCH_queue.json")
     ap.add_argument("--floor", default="benchmarks/baseline_floor.json")
     args = ap.parse_args()
     with open(args.bench) as f:
@@ -90,6 +131,17 @@ def main() -> int:
     with open(args.floor) as f:
         floor = json.load(f)
     failures = check(bench, floor)
+    if any(k.startswith("queue_") for k in floor):
+        try:
+            with open(args.bench_queue) as f:
+                qbench = json.load(f)
+        except OSError:
+            qbench = None
+            failures.append(
+                f"floor file has queue_* keys but {args.bench_queue} is "
+                "missing (was bench_queue run?)")
+        if qbench is not None:
+            failures += check_queue(qbench, floor)
     for msg in failures:
         print(f"PERF REGRESSION: {msg}", file=sys.stderr)
     if not failures:

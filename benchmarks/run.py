@@ -2,10 +2,11 @@
 Prints ``name,us_per_call,derived`` CSV.  --quick trims sizes for CI;
 --backend swaps the hash-experiment index backend (probe | scan | bucket)
 -- "bucket" routes lookups through the Pallas hash_probe kernel.  The
-``bench_hash`` / ``bench_shard`` suites additionally write
-``BENCH_hash.json`` / ``BENCH_shard.json`` (ops/sec and psync/op at the
-canonical configuration, the latter comparing flat vs S in {1, 8} shards)
-for cross-PR perf tracking; CI uploads both as artifacts."""
+``bench_hash`` / ``bench_shard`` / ``bench_queue`` suites additionally
+write ``BENCH_hash.json`` / ``BENCH_shard.json`` / ``BENCH_queue.json``
+(ops/sec and psync/op at the canonical configuration; shard compares flat
+vs S in {1, 8} shards, queue tracks the exact SOFT psync-per-op bound)
+for cross-PR perf tracking; CI uploads all three as artifacts."""
 import argparse
 import inspect
 import sys
@@ -34,11 +35,12 @@ def main() -> None:
 
     from benchmarks import (scalability, key_range, read_pct,
                             psync_counts, recovery, checkpoint_bench,
-                            bench_hash, bench_shard)
+                            bench_hash, bench_shard, bench_queue)
     suites = {
         "psync_counts": psync_counts,    # paper's analytical bound first
         "bench_hash": bench_hash,        # canonical point -> BENCH_hash.json
         "bench_shard": bench_shard,      # sharded runtime -> BENCH_shard.json
+        "bench_queue": bench_queue,      # durable queue -> BENCH_queue.json
         "scalability": scalability,      # Fig 1
         "key_range": key_range,          # Fig 2
         "read_pct": read_pct,            # Fig 3

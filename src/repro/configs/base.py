@@ -132,7 +132,7 @@ def list_configs() -> List[str]:
 
 
 def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
-    """Whether an (arch x shape) dry-run cell applies (DESIGN.md §8)."""
+    """Whether an (arch x shape) dry-run cell applies (DESIGN.md §9)."""
     if shape.name == "long_500k" and not cfg.subquadratic:
         return False, "full-attention arch: 512k decode needs sub-quadratic attention"
     return True, ""

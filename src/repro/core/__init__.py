@@ -16,4 +16,5 @@ from repro.core.shard import (ShardSpec, ShardedDurableMap, shard_of,
                               np_shard_of)
 from repro.core.router import (PLACEMENTS, adaptive_lane_budget,
                                budget_candidates, np_storage_rows)
-from repro.core.oracle import OracleSet
+from repro.core.queue import QueueSpec, QueueState, DurableQueue
+from repro.core.oracle import OracleSet, OracleQueue

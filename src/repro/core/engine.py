@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import sys
 import warnings
 from typing import Dict, Optional, Protocol, Tuple
 
@@ -53,6 +54,40 @@ from repro.kernels.recovery_scan import ops as rs_ops
 # carrying it is an exact no-op (no state change, no psync, no n_ops, result
 # False) -- the padding value the shard router fills unused lane slots with.
 OP_CONTAINS, OP_INSERT, OP_REMOVE, OP_NOP = 0, 1, 2, 3
+
+
+def warn_structure(message: str, stacklevel: int = 3) -> None:
+    """Emit a one-shot-per-STRUCTURE RuntimeWarning.
+
+    ``warnings.warn`` under the default filters dedups through the
+    attributed caller's module ``__warningregistry__``, keyed on (message,
+    category, lineno) -- MODULE-GLOBAL state.  Every durable structure
+    warns from the same few call sites, so the first structure's overflow
+    warning would swallow a second structure's first overflow in the same
+    process (e.g. a queue-full warning after a map-overflow warning).
+    Callers already latch one-shot per instance
+    (``self._overflow_warned``); this helper emits through the normal
+    filter machinery (an explicit "ignore"/"error" filter still applies)
+    and then purges the registry entries the emission created, so the
+    module-global dedup never swallows a LATER structure's first warning.
+
+    ``stacklevel`` has the meaning it would have for a direct
+    ``warnings.warn`` call from the caller, +1 for this helper's frame.
+    """
+    try:
+        # the frame warnings.warn(stacklevel=N) attributes the warning to,
+        # counted from this function's own frame: N-1 levels up.
+        registry = sys._getframe(stacklevel - 1).f_globals.setdefault(
+            "__warningregistry__", {})
+        before = frozenset(registry)
+    except ValueError:                        # stacklevel past the stack top
+        registry, before = None, frozenset()
+    try:
+        warnings.warn(message, RuntimeWarning, stacklevel=stacklevel)
+    finally:
+        if registry is not None:
+            for key in set(registry) - before:
+                registry.pop(key, None)       # undo the dedup record
 
 # f32-exact integer budget of the MXU one-hot gather (see hash_probe.kernel).
 _F32_EXACT = 1 << 24
@@ -495,11 +530,11 @@ class DurableMap:
         instead of silently degrading lookups."""
         if not self._overflow_warned and self.overflowed:
             self._overflow_warned = True
-            warnings.warn(
+            warn_structure(
                 f"{type(self).__name__} index overflow latched "
                 f"(capacity/probe/stash exhausted for spec={self.spec}); "
                 "subsequent lookups may miss live keys -- grow capacity, "
-                "stash_size, or shard the map", RuntimeWarning, stacklevel=3)
+                "stash_size, or shard the map", stacklevel=4)
 
     def insert(self, keys, values=None):
         keys = self._i32(keys)

@@ -223,6 +223,171 @@ class OracleSet:
         return True, "ok"
 
 
+class OracleQueue:
+    """Sequential durable FIFO queue with explicit psync events -- the
+    instruction-granularity reference for :mod:`repro.core.queue`, following
+    the *Durable Queues: The Second Amendment* discipline on the same stage
+    machine (and the same op-trace interface as :class:`OracleSet`: every
+    durable write and psync is an event, ``budget`` crashes mid-op, the
+    per-slot adversary picks a persisted stage in [flushed, cur]).
+
+    Slot reuse is ring-shaped: ticket t lives in slot ``t % capacity`` and
+    a slot is recycled (fresh incarnation) only after its previous
+    dequeue's psync -- guaranteed by the full-queue check, exactly the
+    batched engine's ring-distance guard.  ``Node.key`` carries the
+    ticket, ``Node.value`` the payload.
+    """
+
+    def __init__(self, capacity: int, mode: str = "soft"):
+        assert mode in ("linkfree", "soft", "logfree")
+        self.mode = mode
+        self.capacity = capacity
+        self.nodes = [Node() for _ in range(capacity)]
+        self.head = 0                         # volatile: next dequeue ticket
+        self.tail = 0                         # volatile: next enqueue ticket
+        self.psyncs = 0
+        self.events = 0
+        self.ops: List[OpRecord] = []
+        self.crashed = False
+
+    # -- low-level durable events (same shape as OracleSet) -----------------
+    def _write_stage(self, nid: int, stage: int):
+        n = self.nodes[nid]
+        n.cur = stage
+        n.history.append(stage)
+        self.events += 1
+
+    def _psync(self, nid: int):
+        n = self.nodes[nid]
+        if n.flushed < n.cur:
+            n.flushed = n.cur
+        self.psyncs += 1
+        self.events += 1
+
+    # -- operations ---------------------------------------------------------
+    def enqueue(self, value: int, budget: Optional[int] = None
+                ) -> Optional[bool]:
+        """Append ``value``; False when the ring is full (zero psync), None
+        when the event ``budget`` ran out mid-op (crash point)."""
+        rec = OpRecord("enqueue", value, None)
+        self.ops.append(rec)
+        steps = _Budget(budget)
+
+        if self.tail - self.head >= self.capacity:
+            rec.result, rec.completed = False, True
+            return False
+        nid = self.tail % self.capacity
+        node = self.nodes[nid]
+        if node.cur == DELETED:               # recycle: fresh incarnation
+            assert node.flushed == DELETED    # dequeue psync'd before return
+            node.history = [FREE]
+            node.cur = node.flushed = FREE
+        # flipV1 -> payload (ticket + value) -> makeValid -> psync
+        if steps.spend(self, rec):
+            return None
+        self._write_stage(nid, INVALID)
+        if steps.spend(self, rec):
+            return None
+        node.key, node.value = self.tail, value
+        self._write_stage(nid, PAYLOAD)
+        if steps.spend(self, rec):
+            return None
+        self._write_stage(nid, VALID)
+        if steps.spend(self, rec):
+            return None
+        self._psync(nid)
+        if self.mode == "logfree":
+            if steps.spend(self, rec):
+                return None
+            self._psync(nid)                  # pointer persist
+        if steps.spend(self, rec):
+            return None
+        self.tail += 1                        # volatile publish (SOFT order)
+        rec.result, rec.completed = True, True
+        return True
+
+    def dequeue(self, budget: Optional[int] = None
+                ) -> Optional[Tuple[bool, Optional[int]]]:
+        """Pop the head: (True, value), (False, None) on empty (zero
+        psync), or None when the budget crashed the op."""
+        rec = OpRecord("dequeue", 0, None)
+        self.ops.append(rec)
+        steps = _Budget(budget)
+
+        if self.head == self.tail:
+            rec.result, rec.completed = False, True
+            return False, None
+        nid = self.head % self.capacity
+        node = self.nodes[nid]
+        rec.key = node.value                  # record the popped payload
+        # mark deleted -> psync -> advance head (volatile)
+        if steps.spend(self, rec):
+            return None
+        self._write_stage(nid, DELETED)
+        if steps.spend(self, rec):
+            return None
+        self._psync(nid)
+        if self.mode == "logfree":
+            if steps.spend(self, rec):
+                return None
+            self._psync(nid)                  # pointer persist
+        if steps.spend(self, rec):
+            return None
+        self.head += 1
+        rec.result, rec.completed = True, True
+        return True, node.value
+
+    # -- crash + recovery ---------------------------------------------------
+    def crash(self, evictions: List[int]) -> List[Tuple[int, int, int]]:
+        """Crash now; same adversary contract as :meth:`OracleSet.crash`.
+        Returns the NVM image: (persisted_stage, ticket, value) per slot."""
+        self.crashed = True
+        image = []
+        for n, ev in zip(self.nodes, evictions):
+            lo_idx = n.history.index(n.flushed) if n.flushed in n.history else 0
+            hi_idx = len(n.history) - 1
+            pick = min(hi_idx, max(lo_idx, lo_idx + ev))
+            image.append((n.history[pick], n.key, n.value))
+        return image
+
+    @staticmethod
+    def recover(image: List[Tuple[int, int, int]]
+                ) -> Tuple[List[int], int, int]:
+        """Recovery: persisted VALID slots in ticket order are the live
+        FIFO; head/tail reconstructed from persisted stages alone.
+        Returns (contents front-to-back, head, tail)."""
+        live = sorted((t, v) for stage, t, v in image if stage == VALID)
+        dels = [t for stage, t, _ in image if stage == DELETED]
+        head = live[0][0] if live else (max(dels) + 1 if dels else 0)
+        tail = live[-1][0] + 1 if live else head
+        return [v for _, v in live], head, tail
+
+    # -- durable-linearizability check --------------------------------------
+    def check_recovery(self, recovered: List[int]) -> Tuple[bool, str]:
+        """Recovered FIFO contents must equal the completed-op replay,
+        modulo the single pending operation: a pending enqueue may or may
+        not have appended, a pending dequeue may or may not have popped."""
+        exp: List[int] = []
+        pending = None
+        for rec in self.ops:
+            if not rec.completed:
+                pending = rec
+                continue
+            if rec.kind == "enqueue" and rec.result:
+                exp.append(rec.key)
+            elif rec.kind == "dequeue" and rec.result:
+                exp.pop(0)
+        ok = [tuple(exp)]
+        if pending is not None and pending.kind == "enqueue":
+            ok.append(tuple(exp) + (pending.key,))
+        if pending is not None and pending.kind == "dequeue" and exp:
+            ok.append(tuple(exp[1:]))
+        if tuple(recovered) in ok:
+            return True, "ok"
+        return False, (f"recovered {recovered} not in any crash-consistent "
+                       f"cut {ok} (pending={pending})")
+
+
 class _Budget:
     """Counts down durable events; signals the crash point when exhausted."""
 

@@ -1,0 +1,403 @@
+"""Durable lock-free MPMC ring queue on the shared stage machine.
+
+The paper's durable-set recipe is structure-agnostic: a node's durable
+lifecycle is the monotone FREE -> INVALID -> PAYLOAD -> VALID -> DELETED
+machine of :mod:`repro.core.nvm`, all writes to one cache line, recovery a
+pure classification of persisted stages.  *Durable Queues: The Second
+Amendment* (PAPERS.md) shows the same discipline yields a durable FIFO
+queue with provably low flush counts; this module is that construction on
+the engine's batched lane model (DESIGN.md SS7):
+
+  ring          N = capacity slots (power of two).  Element *tickets* are
+                a monotone virtual sequence; ticket t lives in slot
+                ``t & (N-1)``, so slot reuse is a fresh stage-machine
+                incarnation exactly like the set's ssmem recycling (a slot
+                is re-enqueued only after its previous dequeue's psync --
+                the ring-distance guard ``ticket < head + N`` implies the
+                prior incarnation is flushed-DELETED).
+  enqueue       plan/commit (DESIGN.md SS2a): active lanes claim tickets by
+                lane rank (the ``table_claim`` conflict-resolution idiom --
+                rank r takes ticket tail+r, conflicts impossible because
+                distinct tickets hit distinct slots), then ONE scatter per
+                state plane commits payload+stage: cur=VALID, flushed=VALID
+                (write INVALID -> payload -> makeValid -> psync, collapsed
+                like the set's insert commit).  Lanes past the free-space
+                budget fail (queue full): result False, ZERO psync.
+  dequeue       ranks claim tickets head+r; wins gather the payload and
+                commit cur=DELETED, flushed=DELETED in one scatter (mark ->
+                psync).  Lanes past ``tail`` fail (queue empty): result
+                False, ZERO psync.
+  psync         SOFT: exactly 1 per successful enqueue/dequeue -- the
+                Cohen et al. lower bound the Fence Complexity paper
+                formalizes -- and 0 for failed ops, 0 for reads (peek),
+                0 during recovery.  logfree models the link-persist
+                baseline at 2 per successful op.
+  recovery      head/tail are VOLATILE (rebuilt, never persisted -- the
+                queue-level analogue of the set's volatile index).
+                :func:`recover` classifies persisted stages with the
+                ``recovery_scan`` kernel (Pallas where eligible) and
+                reconstructs: live elements = persisted-VALID slots in
+                ticket order; head = min live ticket (else one past the
+                newest persisted-DELETED ticket); tail = one past the max
+                live ticket.  FIFO discipline means live tickets form the
+                contiguous range [head, tail); a violated invariant latches
+                ``overflow`` -- detectable, never silent.
+
+Tickets are i32: the module supports 2^31 enqueues per state lifetime
+(recovery does not reset tickets of surviving elements).
+
+:class:`DurableQueue` mirrors the :class:`DurableMap` facade (psyncs / ops
+/ len / overflowed / crash_and_recover), so the serving spine in
+:mod:`repro.launch.serve` composes the two behind one idiom.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import durable_set as DS
+from repro.core.durable_set import MODES
+from repro.core.engine import warn_structure
+from repro.core.nvm import (FREE, VALID, DELETED, crash_persisted_stage)
+from repro.kernels.recovery_scan import ops as rs_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class QueueSpec:
+    """Frozen configuration of a durable queue (hashable => static jit arg).
+
+    capacity    ring slots N (power of two: slot = ticket & (N-1))
+    mode        psync discipline: "soft" (1 psync per successful op, the
+                bound) | "linkfree" (same count here: the queue has no
+                read-side helping) | "logfree" (2 per successful op,
+                the link-persist baseline)
+    use_pallas  route recovery classification through the Pallas
+                ``recovery_scan`` kernel where the geometry is eligible
+    interpret   pallas_call interpret mode (True for CPU / debugging)
+    """
+    capacity: int
+    mode: str = "soft"
+    use_pallas: bool = True
+    interpret: bool = True
+
+    def __post_init__(self):
+        c = self.capacity
+        if c < 1 or (c & (c - 1)) != 0:
+            raise ValueError("capacity must be a power of two (ring slot = "
+                             f"ticket & (N-1)), got {c}")
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+
+    def psync_per_success(self) -> int:
+        """Explicit psyncs per successful enqueue/dequeue (the mode's whole
+        performance story; failed ops always pay zero)."""
+        return 2 if self.mode == "logfree" else 1
+
+
+class QueueState(NamedTuple):
+    """Durable ring + volatile cursors + psync accounting.
+
+    ``head``/``tail`` are the volatile FIFO cursors (next dequeue / next
+    enqueue ticket); a crash discards them and recovery reconstructs both
+    from persisted stages alone -- they are the queue's "volatile index".
+    """
+    # --- durable area; vals/tickets persist once stage >= PAYLOAD
+    vals: jax.Array      # i32[N] element payloads
+    tickets: jax.Array   # i32[N] slot incarnation ticket (== virtual seq no)
+    cur: jax.Array       # i32[N] volatile lifecycle stage
+    flushed: jax.Array   # i32[N] stage covered by the last explicit psync
+    # --- volatile cursors (never persisted)
+    head: jax.Array      # i32[] next dequeue ticket
+    tail: jax.Array      # i32[] next enqueue ticket
+    # --- accounting (COUNTER_DTYPE: i64[] under x64, saturating i32[] else)
+    n_psync: jax.Array   # explicit flush+fence count
+    n_ops: jax.Array     # attempted operations (failed ones included)
+    overflow: jax.Array  # bool[] full-enqueue-rejected / invariant latch
+
+
+def make_state(spec: QueueSpec) -> QueueState:
+    n = spec.capacity
+    return QueueState(
+        vals=jnp.zeros((n,), jnp.int32),
+        tickets=jnp.zeros((n,), jnp.int32),
+        cur=jnp.zeros((n,), jnp.int32),
+        flushed=jnp.zeros((n,), jnp.int32),
+        head=jnp.zeros((), jnp.int32),
+        tail=jnp.zeros((), jnp.int32),
+        n_psync=jnp.zeros((), DS.COUNTER_DTYPE),
+        n_ops=jnp.zeros((), DS.COUNTER_DTYPE),
+        overflow=jnp.zeros((), jnp.bool_),
+    )
+
+
+def size(state: QueueState) -> jax.Array:
+    """Live element count (tail - head)."""
+    return state.tail - state.head
+
+
+# ---------------------------------------------------------------------------
+# Plan/commit hot path.  Both ops share the rank-claim plan: active lanes
+# take consecutive tickets by lane rank (lane priority IS the linearization
+# order, as everywhere in DESIGN.md SS2), wins are the ranks inside the
+# cursor budget, and the commit is one scatter per touched state plane.
+# ---------------------------------------------------------------------------
+
+
+def _rank_claim(active: jax.Array, base: jax.Array, budget: jax.Array
+                ) -> Tuple[jax.Array, jax.Array]:
+    """(ticket per lane, win mask): active lane of rank r claims ticket
+    base+r and wins iff r < budget."""
+    rank = jnp.cumsum(active.astype(jnp.int32)) - 1
+    win = active & (rank < budget)
+    return base + rank, win
+
+
+def enqueue_impl(state: QueueState, vals: jax.Array, *, spec: QueueSpec,
+                 active: Optional[jax.Array] = None
+                 ) -> Tuple[QueueState, jax.Array, jax.Array]:
+    """Unjitted batched enqueue body: (state, ok[B], ticket-or-minus-1[B]).
+
+    Winning lanes' slots held a flushed-DELETED (or never-used FREE)
+    incarnation -- the ``rank < N - size`` budget guarantees it -- so the
+    commit may recycle them directly: payload + ticket + cur/flushed=VALID
+    land in one scatter per plane, modeling write-INVALID -> payload ->
+    makeValid -> psync with the per-op psync counted exactly."""
+    b = vals.shape[0]
+    if active is None:
+        active = jnp.ones((b,), jnp.bool_)
+    n = spec.capacity
+    ticket, win = _rank_claim(active, state.tail,
+                              jnp.int32(n) - size(state))
+    slot = ticket & (n - 1)
+    sidx = jnp.where(win, slot, n)                # OOB scatter => dropped
+    count = jnp.sum(win.astype(jnp.int32))
+    full = (active & ~win).any()
+    return QueueState(
+        vals=state.vals.at[sidx].set(vals, mode="drop"),
+        tickets=state.tickets.at[sidx].set(ticket, mode="drop"),
+        cur=state.cur.at[sidx].set(VALID, mode="drop"),
+        flushed=state.flushed.at[sidx].set(VALID, mode="drop"),
+        head=state.head,
+        tail=state.tail + count,
+        n_psync=DS._bump(state.n_psync, count * spec.psync_per_success()),
+        n_ops=DS._bump(state.n_ops, jnp.sum(active.astype(jnp.int32))),
+        overflow=state.overflow | full,
+    ), win, jnp.where(win, ticket, -1)
+
+
+def dequeue_impl(state: QueueState, want: jax.Array, *, spec: QueueSpec,
+                 default: int = 0
+                 ) -> Tuple[QueueState, jax.Array, jax.Array, jax.Array]:
+    """Unjitted batched dequeue body: lanes with ``want`` pop in lane
+    order.  Returns (state, value-or-default[B], ok[B], ticket-or-minus-1).
+
+    The commit is mark -> psync collapsed: cur=DELETED, flushed=DELETED in
+    one scatter.  Empty-queue lanes fail with zero psync."""
+    n = spec.capacity
+    ticket, win = _rank_claim(want, state.head, size(state))
+    slot = ticket & (n - 1)
+    got = jnp.where(win, state.vals[jnp.clip(slot, 0, n - 1)],
+                    jnp.int32(default))
+    sidx = jnp.where(win, slot, n)
+    count = jnp.sum(win.astype(jnp.int32))
+    return QueueState(
+        vals=state.vals, tickets=state.tickets,
+        cur=state.cur.at[sidx].set(DELETED, mode="drop"),
+        flushed=state.flushed.at[sidx].set(DELETED, mode="drop"),
+        head=state.head + count,
+        tail=state.tail,
+        n_psync=DS._bump(state.n_psync, count * spec.psync_per_success()),
+        n_ops=DS._bump(state.n_ops, jnp.sum(want.astype(jnp.int32))),
+        overflow=state.overflow,
+    ), got, win, jnp.where(win, ticket, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
+def enqueue(state: QueueState, vals: jax.Array, *, spec: QueueSpec
+            ) -> Tuple[QueueState, jax.Array, jax.Array]:
+    """Batched durable enqueue: (state, ok[B], ticket[B])."""
+    return enqueue_impl(state, vals, spec=spec)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "default"),
+                   donate_argnums=(0,))
+def dequeue(state: QueueState, want: jax.Array, *, spec: QueueSpec,
+            default: int = 0
+            ) -> Tuple[QueueState, jax.Array, jax.Array, jax.Array]:
+    """Batched durable dequeue: (state, values[B], ok[B], ticket[B])."""
+    return dequeue_impl(state, want, spec=spec, default=default)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "default"))
+def peek(state: QueueState, want: jax.Array, *, spec: QueueSpec,
+         default: int = 0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Volatile read of the head batch WITHOUT consuming it: (values[B],
+    ok[B], ticket[B]).  Pure -- no state change, no psync, not an op (the
+    SOFT wait-free read bound; the serving spine peeks, processes, records
+    the completion durably, and only then commits the dequeue)."""
+    n = spec.capacity
+    ticket, win = _rank_claim(want, state.head, size(state))
+    slot = ticket & (n - 1)
+    got = jnp.where(win, state.vals[jnp.clip(slot, 0, n - 1)],
+                    jnp.int32(default))
+    return got, win, jnp.where(win, ticket, -1)
+
+
+# ---------------------------------------------------------------------------
+# Crash + recovery
+# ---------------------------------------------------------------------------
+
+
+def crash(state: QueueState, u: jax.Array
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Power failure: head/tail (the volatile cursors) are LOST.  Returns
+    only what NVM holds -- per-slot persisted stage plus ticket/value
+    payloads; ``u`` in [0, 1) per slot drives the eviction adversary."""
+    persisted = crash_persisted_stage(state.cur, state.flushed, u)
+    return persisted, state.tickets, state.vals
+
+
+def recover_impl(persisted: jax.Array, tickets: jax.Array, vals: jax.Array,
+                 *, spec: QueueSpec) -> Tuple[QueueState, jax.Array]:
+    """Unjitted recovery body (pure jnp reductions => vmappable, e.g. over
+    a future stacked-queue axis).  Rebuilds head/tail from persisted
+    stages alone:
+
+      live    persisted == VALID  (enqueue completed, dequeue not durable)
+      head    min live ticket; with no live element, one past the newest
+              persisted-DELETED ticket (all those dequeues completed)
+      tail    one past the max live ticket (else == head)
+
+    FIFO discipline (dequeues retire tickets in order; batched commits are
+    atomic at the dispatch boundary) makes live tickets exactly the range
+    [head, tail); a hole would mean a lost element, so the invariant
+    violation latches ``overflow`` instead of passing silently.  No psync
+    is ever issued: payloads are already durable."""
+    member, hist = rs_ops.recovery_scan(persisted, use_pallas=spec.use_pallas,
+                                        interpret=spec.interpret)
+    deleted = persisted == DELETED
+    any_m = member.any()
+    big = jnp.int32(np.iinfo(np.int32).max)
+    min_live = jnp.min(jnp.where(member, tickets, big))
+    max_live = jnp.max(jnp.where(member, tickets, -big))
+    max_del = jnp.max(jnp.where(deleted, tickets, -1))
+    head = jnp.where(any_m, min_live, max_del + 1)
+    tail = jnp.where(any_m, max_live + 1, head)
+    n_live = jnp.sum(member.astype(jnp.int32))
+    cur = jnp.where(member, VALID, FREE)
+    state = QueueState(
+        vals=jnp.where(member, vals, 0),
+        tickets=jnp.where(member, tickets, 0),
+        cur=cur, flushed=cur,
+        head=head, tail=tail,
+        n_psync=jnp.zeros((), DS.COUNTER_DTYPE),
+        n_ops=jnp.zeros((), DS.COUNTER_DTYPE),
+        overflow=(tail - head) != n_live,     # FIFO-hole invariant latch
+    )
+    return state, hist
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def recover(persisted: jax.Array, tickets: jax.Array, vals: jax.Array, *,
+            spec: QueueSpec) -> Tuple[QueueState, jax.Array]:
+    """Jitted recovery: classification via the ``recovery_scan`` kernel
+    (Pallas where eligible) + head/tail reconstruction.  Returns
+    (state, stage histogram i32[5])."""
+    return recover_impl(persisted, tickets, vals, spec=spec)
+
+
+def crash_and_recover(state: QueueState, u: jax.Array, *, spec: QueueSpec
+                      ) -> Tuple[QueueState, jax.Array]:
+    return recover(*crash(state, u), spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# OO facade (mirrors DurableMap)
+# ---------------------------------------------------------------------------
+
+
+class DurableQueue:
+    """Object API over the durable ring queue (single-controller usage).
+
+    >>> q = DurableQueue(QueueSpec(capacity=1024))
+    >>> q.enqueue([7, 8, 9])          # -> [True, True, True], 3 psyncs
+    >>> q.crash_and_recover()         # head/tail lost + rebuilt
+    >>> q.dequeue(2)                  # -> ([7, 8], [True, True])
+    """
+
+    def __init__(self, spec: Optional[QueueSpec] = None, **spec_kwargs):
+        if spec is None:
+            spec = QueueSpec(**spec_kwargs)
+        elif spec_kwargs:
+            spec = dataclasses.replace(spec, **spec_kwargs)
+        self.spec = spec
+        self.state = make_state(spec)
+        self.last_recovery_hist = None    # i32[5] stage histogram
+        self.last_tickets = None          # tickets of the last enqueue batch
+        self._overflow_warned = False
+
+    @property
+    def overflowed(self) -> bool:
+        """True once the latch fired: an enqueue was rejected on a full
+        ring, or recovery found a FIFO-range hole.  Detectable, never
+        silent (the queue analogue of ``DurableMap.overflowed``)."""
+        return bool(self.state.overflow)
+
+    def _check_overflow(self):
+        if not self._overflow_warned and self.overflowed:
+            self._overflow_warned = True
+            warn_structure(
+                f"DurableQueue full: an enqueue was rejected (or recovery "
+                f"found a FIFO hole) for spec={self.spec}; rejected lanes "
+                "returned False -- drain faster or grow capacity",
+                stacklevel=4)
+
+    def enqueue(self, vals):
+        vals = jnp.asarray(vals, jnp.int32)
+        self.state, ok, tickets = enqueue(self.state, vals, spec=self.spec)
+        self.last_tickets = np.asarray(tickets)
+        self._check_overflow()
+        return ok
+
+    def dequeue(self, n: int, default: int = 0):
+        """Pop up to ``n`` elements; returns (values, ok) np arrays."""
+        want = jnp.ones((n,), jnp.bool_)
+        self.state, vals, ok, _ = dequeue(self.state, want, spec=self.spec,
+                                          default=default)
+        return np.asarray(vals), np.asarray(ok)
+
+    def peek(self, n: int, default: int = 0):
+        """Read up to ``n`` head elements without consuming (no psync)."""
+        want = jnp.ones((n,), jnp.bool_)
+        vals, ok, _ = peek(self.state, want, spec=self.spec, default=default)
+        return np.asarray(vals), np.asarray(ok)
+
+    def crash_and_recover(self, u=None):
+        if u is None:
+            u = jnp.zeros_like(self.state.cur, jnp.float32)
+        self.state, hist = crash_and_recover(self.state, jnp.asarray(u),
+                                             spec=self.spec)
+        self.last_recovery_hist = np.asarray(hist)
+        self._overflow_warned = False     # fresh latch after the rebuild
+        self._check_overflow()
+        return self
+
+    @property
+    def psyncs(self):
+        return int(self.state.n_psync)
+
+    @property
+    def ops(self):
+        return int(self.state.n_ops)
+
+    def __len__(self):
+        return int(size(self.state))
+
+    def __repr__(self):
+        return (f"DurableQueue(size={len(self)}, psyncs={self.psyncs}, "
+                f"spec={self.spec})")

@@ -62,7 +62,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -480,18 +479,17 @@ class ShardedDurableMap:
                 knob = ("raise or clear max_lane_budget"
                         if self.sspec.router == "v2" else
                         "raise lane_factor")
-                warnings.warn(
+                E.warn_structure(
                     f"ShardedDurableMap dropped {d} lane(s): a shard "
                     f"received more than the lane budget; {knob} "
                     f"or submit smaller batches (sspec={self.sspec})",
-                    RuntimeWarning, stacklevel=3)
+                    stacklevel=4)
         if not self._overflow_warned and self.overflowed:
             self._overflow_warned = True
-            warnings.warn(
+            E.warn_structure(
                 f"ShardedDurableMap index overflow latched on a shard "
                 f"(spec={self.spec}); lookups may miss live keys -- grow "
-                "capacity, stash_size, or n_shards", RuntimeWarning,
-                stacklevel=3)
+                "capacity, stash_size, or n_shards", stacklevel=4)
         return res
 
     def _apply(self, ops, keys, values):

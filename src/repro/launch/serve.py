@@ -11,8 +11,19 @@ hash-partitioned ShardedDurableMap (one vmapped dispatch over N shards,
 per-shard parallel recovery, DESIGN.md §6) -- the production registry
 shape for millions of request ids.
 
+--queue upgrades the driver to the durable request/completion SPINE
+(DESIGN.md §7): arrivals are acknowledged by a durable enqueue into a
+request DurableQueue, the server peeks (volatile, zero psync) the batch
+it serves, and after generation the completion path runs response-enqueue
+-> registry-insert -> request-dequeue-commit.  The dequeue becomes
+durable only AFTER the completion is recorded, so a crash at any point
+loses no acknowledged request: it is either still live in the request
+queue (will be re-served; the registry dedups re-delivery) or already in
+the registry.  --crash drills exactly that invariant end to end.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b-smoke \
-      --requests 8 --gen 16 [--crash] [--backend bucket] [--shards 8]
+      --requests 8 --gen 16 [--crash] [--backend bucket] [--shards 8] \
+      [--queue] [--queue-capacity 1024]
 """
 from __future__ import annotations
 
@@ -24,7 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import DurableMap, ShardedDurableMap, SetSpec
+from repro.core import (DurableMap, DurableQueue, QueueSpec,
+                        ShardedDurableMap, SetSpec)
 from repro.models import model as M
 from repro.models.sharding import CPU_CTX
 from repro.train import steps as TS
@@ -54,6 +66,13 @@ def main(argv=None):
     ap.add_argument("--max-lane-budget", type=int, default=0,
                     help="cap the v2 adaptive lane budget (0 = uncapped; "
                          "a cap drops + counts over-budget lanes)")
+    ap.add_argument("--queue", action="store_true",
+                    help="drive traffic through the durable request/"
+                         "completion spine: DurableQueue ack -> peek/serve "
+                         "-> response enqueue -> registry insert -> dequeue "
+                         "commit (DESIGN.md §7)")
+    ap.add_argument("--queue-capacity", type=int, default=1024,
+                    help="ring slots per spine queue (power of two)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -75,6 +94,22 @@ def main(argv=None):
     else:
         registry = DurableMap(spec)
     b = args.requests
+    req_ids = np.arange(1000, 1000 + b, dtype=np.int32)
+
+    req_q = resp_q = None
+    if args.queue:
+        qspec = QueueSpec(capacity=args.queue_capacity, mode="soft")
+        req_q, resp_q = DurableQueue(qspec), DurableQueue(qspec)
+        # 1. durable admission: the ack psync makes the request survivable
+        acked = np.asarray(req_q.enqueue(req_ids))
+        assert acked.all(), "admission queue full"
+        print(f"spine: acknowledged {int(acked.sum())} requests durably "
+              f"(req-queue psyncs={req_q.psyncs})")
+        # 2. volatile peek of the batch being served (zero psync)
+        served_ids, ok = req_q.peek(b)
+        assert ok.all()
+        np.testing.assert_array_equal(served_ids, req_ids)
+
     max_seq = args.prompt_len + args.gen
     rng = np.random.default_rng(0)
     toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, args.prompt_len)),
@@ -95,9 +130,19 @@ def main(argv=None):
     print(f"served {b} requests x {args.gen} tokens in {dt:.2f}s "
           f"({b * args.gen / dt:.1f} tok/s)")
 
-    # durably record completions: one psync per request (SOFT bound)
-    req_ids = np.arange(1000, 1000 + b, dtype=np.int32)
+    # durably record completions: one psync per request (SOFT bound).
+    # Spine order (--queue): response enqueue -> registry insert -> request
+    # dequeue COMMIT -- the dequeue's psync happens only after the
+    # completion is durable, so no acknowledged request can be lost.
+    if args.queue:
+        resp_q.enqueue(req_ids)
     registry.insert(req_ids, np.asarray(gen[:, -1]))
+    if args.queue:
+        _, committed = req_q.dequeue(b)
+        assert committed.all()
+        print(f"spine: {len(resp_q)} completions enqueued, request queue "
+              f"drained (len={len(req_q)}), total spine psyncs="
+              f"{req_q.psyncs + resp_q.psyncs}")
     shard_tag = f" x{args.shards} shards" if args.shards > 1 else ""
     print(f"registry[{args.backend}{shard_tag}]: {len(registry)} completed, "
           f"psyncs={registry.psyncs} (== #requests)")
@@ -111,6 +156,16 @@ def main(argv=None):
         done = np.array(registry.contains(req_ids))
         assert done.all()
         print(f"after crash+recovery: all {b} completions still registered")
+        if args.queue:
+            req_q.crash_and_recover()
+            resp_q.crash_and_recover()
+            # no acknowledged request lost: each is in the registry or
+            # still live in the recovered request queue (here: all done)
+            vals, ok = resp_q.peek(b)
+            assert ok.all() and set(vals.tolist()) == set(req_ids.tolist())
+            assert len(req_q) == 0, "committed dequeues must stay dequeued"
+            print(f"spine after crash+recovery: {len(resp_q)} completions "
+                  f"survive, request queue still drained")
     return 0
 
 

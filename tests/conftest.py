@@ -1,0 +1,19 @@
+"""Shared pytest configuration.
+
+jaxlib 0.4.37's CPU client can segfault inside ``backend_compile`` once a
+long single-process run has accumulated a few hundred compiled
+executables (reproducible: the full suite crashed compiling the sharded
+dispatch in tests/test_shard.py at the same collection point twice, while
+every module subset passes in isolation).  Dropping the jit executable
+caches at module boundaries keeps the live-executable count bounded; each
+module recompiles only its own shapes, which costs seconds over the whole
+suite.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()
