@@ -27,6 +27,12 @@ balanced keysets (exact B/S occupancy per shard, where the adaptive
 budget picks L == B/S instead of v1's 2*B/S); the ``v2_vs_v1`` ratios are
 floored by ``min_router_v2_vs_v1`` in the CI guard.
 
+The ``pipeline`` section compares the double-buffered router pipeline
+(``pipeline_depth=2``, DESIGN.md §6) against the synchronous facade loop
+at the same canonical soft/S=8 point per backend: ``pipeline_vs_sync``
+ops/s ratios are floored by ``min_pipeline_vs_sync`` and the EXACT psync
+equality between the two schedules is asserted via ``psync_match``.
+
 ``--quick`` KEEPS the canonical geometry -- sharding pays off at scale, so
 shrinking capacity/batch would measure fixed dispatch overhead instead of
 the acceptance point -- and trims the mode sweep to soft only (rounds stay
@@ -40,8 +46,8 @@ import platform
 
 import jax
 
-from benchmarks.common import (balanced_keygen, run_workload,
-                               run_sharded_workload, fmt_row)
+from benchmarks.common import (balanced_keygen, run_pipelined_workload,
+                               run_workload, run_sharded_workload, fmt_row)
 
 MODES = ("soft", "linkfree", "logfree")
 BACKENDS = ("probe", "scan", "bucket")
@@ -121,6 +127,42 @@ def run(quick: bool = False, out: str = OUT, backend: str = None):
             / router[f"v1_{kind}"]["ops_per_sec"]
             for kind in ("uniform", "balanced")}
         payload["router"] = router
+    # Double-buffered router pipeline vs synchronous facade (DESIGN.md §6)
+    # at the canonical soft/S=8 point, per backend.  Identical seeded
+    # traces, so the psync totals must match EXACTLY -- the conformance
+    # half of the ``min_pipeline_vs_sync`` CI floor.
+    # Interleaved best-of-2 per depth: the dispatch-bound probe backend
+    # shows the same +-25% run-to-run noise band the rounds comment above
+    # documents, and a single unlucky sample must not trip the CI floor.
+    # The psync totals, by contrast, must agree across EVERY run -- the
+    # schedules execute identical traces.
+    pipeline = {"mode": "soft", "depth": 2, "repeats": 2}
+    for bk in backends:
+        best, psyncs = {}, {}
+        for _ in range(2):
+            for depth in (1, 2):
+                r, p = run_pipelined_workload(
+                    "soft", bk, 8, cap, kr, batch, read_pct, rounds=rounds,
+                    pipeline_depth=depth)
+                if depth not in best or r.ops_per_sec > best[depth].ops_per_sec:
+                    best[depth] = r
+                psyncs.setdefault(depth, set()).add(p)
+        sync_r, pipe_r = best[1], best[2]
+        ratio = pipe_r.ops_per_sec / sync_r.ops_per_sec
+        pipeline[bk] = {
+            "sync_ops_per_sec": sync_r.ops_per_sec,
+            "pipe_ops_per_sec": pipe_r.ops_per_sec,
+            "pipeline_vs_sync": ratio,
+            "psync_match": psyncs[1] == psyncs[2] and len(psyncs[1]) == 1,
+            "psyncs": sorted(psyncs[2])[0],
+        }
+        rows.append(fmt_row(f"bench_shard_pipeline_{bk}_sync", sync_r,
+                            {"ops_per_sec": f"{sync_r.ops_per_sec:.0f}"}))
+        rows.append(fmt_row(f"bench_shard_pipeline_{bk}_d2", pipe_r,
+                            {"ops_per_sec": f"{pipe_r.ops_per_sec:.0f}",
+                             "pipeline_vs_sync": f"{ratio:.2f}x",
+                             "psync_match": pipeline[bk]["psync_match"]}))
+    payload["pipeline"] = pipeline
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
         f.write("\n")
@@ -130,6 +172,9 @@ def run(quick: bool = False, out: str = OUT, backend: str = None):
         vv = payload["router"]["v2_vs_v1"]
         extra = (f";router_v2_vs_v1_uniform={vv['uniform']:.2f}x"
                  f";router_v2_vs_v1_balanced={vv['balanced']:.2f}x")
+    extra += ";".join([""] + [
+        f"pipeline_{bk}={payload['pipeline'][bk]['pipeline_vs_sync']:.2f}x"
+        for bk in backends])
     rows.append(f"bench_shard_json,0.000,path={out};" + ";".join(
         f"{bk}_s8_vs_s1={sp[bk]:.2f}x" for bk in backends) + extra)
     return rows

@@ -14,6 +14,14 @@ floors in ``benchmarks/baseline_floor.json``:
   * ``router.v2_vs_v1`` below ``min_router_v2_vs_v1`` (when both are
     present): the two-stage adaptive router must not lose to the v1
     single-stage router at the canonical point;
+  * ``pipeline.<backend>.pipeline_vs_sync`` below ``min_pipeline_vs_sync``
+    after ``pipeline_tolerance``: the depth-2 double-buffered dispatch
+    path must not lose to the synchronous facade (the floor sits at 1.0
+    with a flat tolerance -- on a 2-core CI host the overlap headroom is
+    small, so this only guards "pipelining made it slower"); additionally
+    ``psync_match`` must be EXACTLY true -- the overlapped schedule
+    issuing different psyncs than the sequential one is a conformance
+    bug, never noise;
   * durable-queue (``BENCH_queue.json``, required whenever the floor file
     carries ``queue_*`` keys): steady-state soft throughput below
     ``queue_soft_ops_per_sec`` after tolerance, soft ``psync_per_op``
@@ -85,6 +93,30 @@ def check(bench: dict, floor: dict) -> list:
                     failures.append(
                         f"router v2_vs_v1[{kind}] {ratio:.2f}x < required "
                         f"{floor['min_router_v2_vs_v1']:.2f}x")
+    if "min_pipeline_vs_sync" in floor:
+        if "pipeline" not in bench:
+            failures.append(
+                "pipeline section missing from the benchmark payload, so "
+                "the min_pipeline_vs_sync floor was never evaluated (was "
+                "bench_shard run from a pre-pipeline payload?)")
+        else:
+            min_p = floor["min_pipeline_vs_sync"] \
+                * (1.0 - floor.get("pipeline_tolerance", 0.15))
+            for bk, row in bench["pipeline"].items():
+                if not isinstance(row, dict) or "pipeline_vs_sync" not in row:
+                    continue                   # config keys (mode, depth)
+                if row["pipeline_vs_sync"] < min_p:
+                    failures.append(
+                        f"pipeline[{bk}] {row['pipeline_vs_sync']:.2f}x < "
+                        f"required {min_p:.2f}x "
+                        f"({floor['min_pipeline_vs_sync']:.2f} - "
+                        f"{100 * floor.get('pipeline_tolerance', 0.15):.0f}%)")
+                # EXACT conformance bound, no tolerance: the overlapped
+                # schedule must issue the same psyncs as the sequential one
+                if not row.get("psync_match", False):
+                    failures.append(
+                        f"pipeline[{bk}] psync totals diverge from the "
+                        "synchronous schedule (conformance bug, not noise)")
     return failures
 
 

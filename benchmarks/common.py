@@ -191,6 +191,60 @@ def run_sharded_workload(mode: str, backend: str, n_shards: int,
                   rounds=rounds)
 
 
+def run_pipelined_workload(mode: str, backend: str, n_shards: int,
+                           capacity: int, key_range: int, batch: int,
+                           read_pct: int, rounds: int = 30, seed: int = 0,
+                           prefill: bool = True, pipeline_depth: int = 1):
+    """The mixed workload through the ``ShardedDurableMap`` facade at a
+    given ``pipeline_depth`` -- depth 1 is the synchronous v2 serving
+    loop, depth >= 2 the double-buffered pipeline (DESIGN.md §6) where
+    host stage 1 of round k+1 overlaps device execution of round k and
+    results are only forced by the terminal ``pipeline_flush``.  Both
+    depths run the identical seeded trace, so the returned psync total
+    supports the exact-equality conformance check the CI floor enforces.
+
+    Returns ``(Result, psyncs)`` with ``psyncs`` the counter delta over
+    the timed rounds."""
+    rng = np.random.default_rng(seed)
+    kw = {"pipeline_depth": pipeline_depth} if pipeline_depth > 1 else {}
+    m = SH.ShardedDurableMap(
+        SetSpec(capacity=capacity, mode=mode, backend=backend),
+        n_shards=n_shards, **kw)
+    if prefill:
+        keys = rng.choice(key_range, key_range // 2, replace=False)
+        for i in range(0, len(keys), batch):
+            chunk = np.resize(keys[i:i + batch], batch).astype(np.int32)
+            m.insert(chunk, chunk)
+        m.pipeline_flush()
+
+    ops = np.asarray(_mixed_ops(batch, read_pct))
+    n_upd = int(np.sum(ops != OP_CONTAINS))
+    ks = [rng.integers(0, key_range, batch).astype(np.int32)
+          for _ in range(rounds + 1)]
+
+    # trace every reachable (Bd, lane_budget) variant up front -- the
+    # timed loop must measure dispatch, not compilation (satellite: the
+    # first pipelined batch never pays a trace stall mid-serve)
+    m.precompile(batch)
+    m.apply(ops, ks[0], ks[0])
+    m.pipeline_flush()
+    p0, o0 = m.psyncs, m.ops
+    t0 = time.perf_counter()
+    for k in ks[1:]:
+        m.apply(ops, k, k)
+    m.pipeline_flush()           # force the tail: honest end-to-end time
+    dt = time.perf_counter() - t0
+    d_psync = m.psyncs - p0
+    d_ops = m.ops - o0
+    updates = max(n_upd * rounds, 1)
+    assert not m.overflowed, "capacity overflow in benchmark"
+    assert m.router_dropped == 0, "router dropped lanes in benchmark"
+    return Result(ops_per_sec=d_ops / dt,
+                  psync_per_op=d_psync / max(d_ops, 1),
+                  psync_per_update=d_psync / updates,
+                  rounds=rounds), d_psync
+
+
 def fmt_row(name: str, res: Result, extra: Dict = ()) -> str:
     us_per_call = 1e6 / max(res.ops_per_sec, 1e-9)
     derived = f"psync_per_update={res.psync_per_update:.3f}"

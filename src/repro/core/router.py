@@ -45,6 +45,20 @@ three index backends.  Under budget pressure the drop sets differ by
 design: v1's static budget sheds skew that uncapped v2 widens L to
 absorb.
 
+Pipelining (DESIGN.md §6): every routing artifact this module produces is
+VOLATILE -- NVTraverse's traverse-volatile/persist-destination rule means
+the lane grids, slot maps, and occupancy histograms carry no durability
+obligation, so stage 1 of batch k+1 may run on the host WHILE the jitted
+stage-2 program of batch k executes on device (JAX async dispatch), and
+the gather-back may be deferred until a caller actually reads the
+results.  :func:`apply_batch_v2_async` / :func:`get_v2_async` return an
+:class:`InFlight` whose ``force()`` performs the only host sync;
+the synchronous entrypoints are the same machinery forced immediately,
+so results, state, and psync counters are bit-identical by construction
+(pinned by ``tests/test_pipeline.py``).  Host scratch (the (D, Bd) lane
+grids and the slot map) comes from a per-geometry pool and is recycled
+once its batch has been forced -- steady-state routing allocates nothing.
+
 This module must not import :mod:`repro.core.shard` (shard.py imports
 it); ``sspec`` arguments are duck-typed ``ShardSpec`` instances.
 """
@@ -150,6 +164,94 @@ def budget_candidates(sspec, batch: int) -> Tuple[int, ...]:
 
 
 # ---------------------------------------------------------------------------
+# Host routing scratch: pooled per-(D, Bd, B) numpy buffers.
+#
+# Stage 1 used to allocate fresh (D, Bd) grids + a slot map every batch;
+# at the canonical 1024-lane geometry that is ~3 MB of allocator traffic
+# per round and, under the pipelined dispatch path, garbage churn racing
+# the device.  The pool recycles a scratch set once the batch that used
+# it has been FORCED (its device execution is complete, so even a
+# zero-copy host->device transfer no longer aliases the buffers).  A
+# ``RoutePlan``'s numpy views are therefore valid until its batch is
+# forced AND a later batch at the same geometry acquires the recycled
+# set -- treat plan telemetry as transient.
+# ---------------------------------------------------------------------------
+
+
+class _Scratch:
+    """One reusable stage-1 buffer set for a (D, Bd, B) geometry."""
+    __slots__ = ("key", "d_ops", "d_keys", "d_vals", "slot")
+
+    def __init__(self, key):
+        d, bd, b = key
+        self.key = key
+        self.d_ops = np.empty((d, bd), np.int32)
+        self.d_keys = np.empty((d, bd), np.int32)
+        self.d_vals = np.empty((d, bd), np.int32)
+        self.slot = np.empty((b,), np.int64)
+
+
+class _ScratchPool:
+    """Free-list of :class:`_Scratch` sets keyed by geometry.
+
+    ``grid_allocs`` counts real buffer allocations; at a steady-state
+    geometry it must stay flat (the allocation-count regression test in
+    ``tests/test_pipeline.py`` pins this).
+    """
+
+    def __init__(self):
+        self._free = {}
+        self.grid_allocs = 0
+        self.acquires = 0
+
+    def acquire(self, d: int, bd: int, b: int) -> _Scratch:
+        key = (d, bd, b)
+        self.acquires += 1
+        free = self._free.get(key)
+        if free:
+            return free.pop()
+        self.grid_allocs += 1
+        return _Scratch(key)
+
+    def release(self, scratch) -> None:
+        if scratch is not None:
+            self._free.setdefault(scratch.key, []).append(scratch)
+
+    def stats(self) -> dict:
+        return {"grid_allocs": self.grid_allocs, "acquires": self.acquires,
+                "free": sum(len(v) for v in self._free.values())}
+
+    def clear(self) -> None:
+        self._free.clear()
+
+
+_POOL = _ScratchPool()
+
+_ARANGE_CACHE: dict = {}
+
+
+def _cached_arange(n: int) -> np.ndarray:
+    """Read-only ``arange(n, dtype=int64)`` shared across fast-path plans."""
+    a = _ARANGE_CACHE.get(n)
+    if a is None:
+        a = np.arange(n, dtype=np.int64)
+        a.setflags(write=False)
+        _ARANGE_CACHE[n] = a
+    return a
+
+
+def scratch_stats() -> dict:
+    """Pool counters for the allocation-regression test."""
+    return _POOL.stats()
+
+
+def release_plan(plan: "RoutePlan") -> None:
+    """Return a plan's scratch set to the pool (idempotent per scratch;
+    callers must not release the same plan twice)."""
+    _POOL.release(plan.scratch)
+
+
+# ---------------------------------------------------------------------------
 # Stage 1: host-side device split (numpy, outside jit).
 # ---------------------------------------------------------------------------
 
@@ -167,6 +269,9 @@ class RoutePlan(NamedTuple):
     lane_budget          adaptive stage-2 budget L (static)
     max_occ              realized max per-shard occupancy (real lanes)
     occupancy            i64[S] realized occupancy per storage row
+    scratch              pooled buffer set backing d_ops/d_keys/d_vals/slot
+                         (None when the plan owns its arrays); recycled by
+                         :func:`release_plan` once the batch is forced
     """
     d_ops: np.ndarray
     d_keys: np.ndarray
@@ -176,6 +281,7 @@ class RoutePlan(NamedTuple):
     lane_budget: int
     max_occ: int
     occupancy: np.ndarray
+    scratch: object = None
 
 
 def host_route(sspec, ops: np.ndarray, keys: np.ndarray,
@@ -190,6 +296,11 @@ def host_route(sspec, ops: np.ndarray, keys: np.ndarray,
     priority downstream equals global lane priority.  ``OP_NOP`` input
     lanes (caller padding) are not transported at all -- they are exact
     no-ops with result False by definition.
+
+    The (D, Bd) grids and the slot map come from the per-geometry scratch
+    pool; the plan's ``scratch`` handle is recycled (``release_plan``)
+    once the batch has been forced, so steady-state routing performs no
+    grid allocation.
     """
     ops = np.asarray(ops, np.int32)
     keys = np.asarray(keys, np.int32)
@@ -210,21 +321,26 @@ def host_route(sspec, ops: np.ndarray, keys: np.ndarray,
         # (order preserved) -- skip the split/scatter, but still pad to
         # the pow2 Bd bucket so live shapes match what precompile traced
         bd = _pow2_at_least(b)
-        pad = bd - b
-        return RoutePlan(
-            np.pad(ops, (0, pad), constant_values=OP_NOP)[None],
-            np.pad(keys, (0, pad))[None], np.pad(values, (0, pad))[None],
-            np.arange(b, dtype=np.int64), 1, lane_budget, max_occ,
-            occupancy)
+        sc = _POOL.acquire(1, bd, b)
+        sc.d_ops[0, :b] = ops
+        sc.d_ops[0, b:] = OP_NOP
+        sc.d_keys[0, :b] = keys
+        sc.d_keys[0, b:] = 0
+        sc.d_vals[0, :b] = values
+        sc.d_vals[0, b:] = 0
+        return RoutePlan(sc.d_ops, sc.d_keys, sc.d_vals, _cached_arange(b),
+                         1, lane_budget, max_occ, occupancy, sc)
 
     gid = row // per
     counts = np.bincount(gid[real], minlength=d)
     bd = _pow2_at_least(max(int(counts.max()) if b else 0, 1))
 
-    d_ops = np.full((d, bd), OP_NOP, np.int32)
-    d_keys = np.zeros((d, bd), np.int32)
-    d_vals = np.zeros((d, bd), np.int32)
-    slot = np.full((b,), -1, np.int64)
+    sc = _POOL.acquire(d, bd, b)
+    d_ops, d_keys, d_vals, slot = sc.d_ops, sc.d_keys, sc.d_vals, sc.slot
+    d_ops.fill(OP_NOP)
+    d_keys.fill(0)
+    d_vals.fill(0)
+    slot.fill(-1)
     if b:
         # stable group-major order; rank within group = sub-batch position
         lanes = np.flatnonzero(real)
@@ -237,7 +353,7 @@ def host_route(sspec, ops: np.ndarray, keys: np.ndarray,
         d_vals[g_sorted, rank] = values[order]
         slot[order] = g_sorted.astype(np.int64) * bd + rank
     return RoutePlan(d_ops, d_keys, d_vals, slot, d, lane_budget, max_occ,
-                     occupancy)
+                     occupancy, sc)
 
 
 def host_gather(grid, slot: np.ndarray, fill) -> np.ndarray:
@@ -408,7 +524,102 @@ def _get_v2(state, d_keys: jax.Array, d_active: jax.Array, *, sspec,
 
 # ---------------------------------------------------------------------------
 # Host entrypoints (stage 1 + jitted stage 2/dispatch + host gather-back).
+#
+# The dispatch is ASYNC at the JAX level: the jitted program returns
+# device futures immediately, so the synchronous entrypoints are the
+# async ones forced on the spot, and the pipelined path simply defers the
+# force.  Because every routing artifact is volatile (NVTraverse:
+# traverse volatile, persist the destination), deferring the gather-back
+# changes no durability obligation -- psyncs happen inside the jitted
+# program in exactly the same order either way.
 # ---------------------------------------------------------------------------
+
+
+class InFlight:
+    """A dispatched-but-unforced v2 batch.
+
+    Holds the device futures of the jitted stage-2 program plus the
+    stage-1 :class:`RoutePlan` needed to invert them.  ``force()``
+    performs the (only) host sync, returns the per-lane numpy results,
+    and recycles the plan's scratch set.  ``kind`` is "apply"
+    (``force() -> (results bool[B], dropped)``) or "get"
+    (``force() -> (values i32[B], present bool[B], dropped)``).
+    """
+    __slots__ = ("kind", "plan", "outs", "default", "_forced")
+
+    def __init__(self, kind: str, plan: RoutePlan, outs, default: int = 0):
+        self.kind = kind
+        self.plan = plan
+        self.outs = outs          # device futures, or None for empty plans
+        self.default = default
+        self._forced = None
+
+    @property
+    def forced(self) -> bool:
+        return self._forced is not None
+
+    def force(self):
+        if self._forced is None:
+            plan = self.plan
+            if self.kind == "apply":
+                if self.outs is None:
+                    self._forced = (np.zeros((0,), bool), 0)
+                else:
+                    res, dropped = self.outs
+                    self._forced = (host_gather(res, plan.slot, False),
+                                    int(np.asarray(dropped).sum()))
+            else:
+                if self.outs is None:
+                    self._forced = (np.zeros((0,), np.int32),
+                                    np.zeros((0,), bool), 0)
+                else:
+                    vals, pres, dropped = self.outs
+                    self._forced = (
+                        host_gather(vals, plan.slot, np.int32(self.default)),
+                        host_gather(pres, plan.slot, False),
+                        int(np.asarray(dropped).sum()))
+            self.outs = None
+            _POOL.release(plan.scratch)
+        return self._forced
+
+
+def dispatch_plan(state, plan: RoutePlan, *, sspec, kind: str = "apply",
+                  default: int = 0):
+    """Launch the jitted stage-2 program for a stage-1 plan (no host
+    sync).  Returns ``(state futures, InFlight)``; an empty plan is a
+    no-op whose scratch is recycled immediately."""
+    if plan.slot.size == 0:
+        _POOL.release(plan.scratch)
+        return state, InFlight(kind, plan._replace(scratch=None), None,
+                               default)
+    if kind == "apply":
+        state, res, dropped = _apply_v2(
+            state, jnp.asarray(plan.d_ops), jnp.asarray(plan.d_keys),
+            jnp.asarray(plan.d_vals), sspec=sspec, groups=plan.groups,
+            lane_budget=plan.lane_budget)
+        return state, InFlight(kind, plan, (res, dropped))
+    state, vals, pres, dropped = _get_v2(
+        state, jnp.asarray(plan.d_keys),
+        jnp.asarray(plan.d_ops) == OP_CONTAINS, sspec=sspec,
+        groups=plan.groups, lane_budget=plan.lane_budget, default=default)
+    return state, InFlight(kind, plan, (vals, pres, dropped), default)
+
+
+def apply_batch_v2_async(state, ops, keys, values, *, sspec):
+    """Two-stage routed mixed-op batch WITHOUT the host sync: stage 1
+    routes on the host, stage 2 is dispatched, and the gather-back is
+    deferred to ``InFlight.force()``.  Returns ``(state, InFlight)``."""
+    plan = host_route(sspec, ops, keys, values)
+    return dispatch_plan(state, plan, sspec=sspec, kind="apply")
+
+
+def get_v2_async(state, keys, *, sspec, default: int = 0):
+    """Async two-stage value lookup; see :func:`apply_batch_v2_async`."""
+    keys = np.asarray(keys, np.int32)
+    ops = np.full(keys.shape, OP_CONTAINS, np.int32)
+    plan = host_route(sspec, ops, keys, keys)
+    return dispatch_plan(state, plan, sspec=sspec, kind="get",
+                         default=default)
 
 
 def apply_batch_v2(state, ops, keys, values, *, sspec):
@@ -416,36 +627,20 @@ def apply_batch_v2(state, ops, keys, values, *, sspec):
     bool[B] (numpy), dropped int, plan RoutePlan)``.  Linearization and
     psync accounting are bit-identical to the v1 single-stage router
     (same lanes, same per-shard order)."""
-    plan = host_route(sspec, ops, keys, values)
-    if plan.slot.size == 0:
-        return state, np.zeros((0,), bool), 0, plan
-    state, res, dropped = _apply_v2(
-        state, jnp.asarray(plan.d_ops), jnp.asarray(plan.d_keys),
-        jnp.asarray(plan.d_vals), sspec=sspec, groups=plan.groups,
-        lane_budget=plan.lane_budget)
-    out = host_gather(res, plan.slot, False)
-    return state, out, int(np.asarray(dropped).sum()), plan
+    state, fl = apply_batch_v2_async(state, ops, keys, values, sspec=sspec)
+    out, dropped = fl.force()
+    return state, out, dropped, fl.plan
 
 
 def get_v2(state, keys, *, sspec, default: int = 0):
     """Two-stage routed value lookup.  Returns ``(state, values i32[B],
     present bool[B], dropped int, plan)``."""
-    keys = np.asarray(keys, np.int32)
-    ops = np.full(keys.shape, OP_CONTAINS, np.int32)
-    plan = host_route(sspec, ops, keys, keys)
-    if plan.slot.size == 0:
-        return (state, np.zeros((0,), np.int32), np.zeros((0,), bool), 0,
-                plan)
-    state, vals, pres, dropped = _get_v2(
-        state, jnp.asarray(plan.d_keys),
-        jnp.asarray(plan.d_ops) == OP_CONTAINS, sspec=sspec,
-        groups=plan.groups, lane_budget=plan.lane_budget, default=default)
-    out_v = host_gather(vals, plan.slot, np.int32(default))
-    out_p = host_gather(pres, plan.slot, False)
-    return state, out_v, out_p, int(np.asarray(dropped).sum()), plan
+    state, fl = get_v2_async(state, keys, sspec=sspec, default=default)
+    out_v, out_p, dropped = fl.force()
+    return state, out_v, out_p, dropped, fl.plan
 
 
-def precompile(state, batch: int, *, sspec):
+def precompile(state, batch: int, *, sspec, partial=None):
     """Pre-compile the stage-2 program for every budget the adaptive
     chooser can select for a B-lane batch (the "small set of pre-compiled
     power-of-two budgets").  Executes all-NOP sub-batches -- exact no-ops
@@ -453,17 +648,39 @@ def precompile(state, batch: int, *, sspec):
     next_pow2(max group count), which for a near-balanced split lands on
     either next_pow2(ceil(B/D)) or one bucket above it (the max of D
     multinomial counts routinely exceeds B/D), so BOTH shapes are traced.
-    Returns (state, budgets traced)."""
+
+    ``partial`` (default: on iff ``sspec.pipeline_depth > 1``) ALSO
+    traces every smaller pow2 Bd bucket a padded batch can realize: a
+    pipelined serving loop pads short waves with ``OP_NOP`` lanes, which
+    stage 1 does not transport, so the realized Bd shrinks below the
+    full-batch bucket and an untraced shape would stall the pipeline
+    mid-serve exactly when overlap matters.  For each smaller bucket only
+    the budgets actually reachable at that occupancy (max_occ <= D*Bd)
+    are traced, so the sweep stays near-linear in log2(B) rather than
+    quadratic.  Returns (state, budgets traced for the full batch)."""
     b = max(int(batch), 1)
     d = resolve_groups(sspec)
+    if partial is None:
+        partial = getattr(sspec, "pipeline_depth", 1) > 1
     budgets = budget_candidates(sspec, b)
-    bds = {_pow2_at_least(-(-b // d))}
+    bd_full = _pow2_at_least(-(-b // d))
+    bds = {bd_full: budgets}
     if d > 1:
-        bds.add(min(2 * _pow2_at_least(-(-b // d)), _pow2_at_least(b)))
+        bds[min(2 * bd_full, _pow2_at_least(b))] = budgets
+    if partial:
+        bd = bd_full // 2
+        while bd >= 1:
+            # a shard's occupancy never exceeds its group's lane count,
+            # which the bucket bounds by bd -- sweep only that far
+            reach = tuple(sorted({
+                adaptive_lane_budget(sspec, b, 1 << i)
+                for i in range(bd.bit_length() + 1)}))
+            bds.setdefault(bd, reach)
+            bd //= 2
     for bd in sorted(bds):
         nop = jnp.full((d, bd), OP_NOP, jnp.int32)
         zero = jnp.zeros((d, bd), jnp.int32)
-        for lane in budgets:
+        for lane in bds[bd]:
             state, _, _ = _apply_v2(state, nop, zero, zero, sspec=sspec,
                                     groups=d, lane_budget=lane)
             state, _, _, _ = _get_v2(state, zero, nop == OP_CONTAINS,

@@ -107,6 +107,17 @@ class ShardSpec:
                     the mesh size under ``use_shard_map``, else 1).  A
                     non-mesh group count is dispatched with vmap -- the
                     logical two-stage split for tests/CI on one device
+    pipeline_depth  v2 only: depth of the double-buffered dispatch
+                    pipeline through :class:`ShardedDurableMap` (1 = the
+                    default fully synchronous behavior).  At depth k the
+                    facade keeps the newest batch STAGED host-side
+                    (stage-1 routed, not yet dispatched) and up to k-1
+                    dispatched batches un-forced, so stage 1 of batch
+                    n+1 runs on the host while batch n executes on
+                    device and results gather back lazily.  Results,
+                    state, and psync counters are bit-identical to
+                    depth 1 (tests/test_pipeline.py); a crash abandons
+                    only the staged (never-dispatched, zero-psync) batch
     use_shard_map   partition the vmapped dispatch over a 1-D device mesh
                     when more than one device is available (opt-in; a
                     single-device process silently stays on plain vmap)
@@ -119,6 +130,7 @@ class ShardSpec:
     min_lane_budget: int = 32
     max_lane_budget: int = 0
     n_device_groups: int = 0
+    pipeline_depth: int = 1
     use_shard_map: bool = False
 
     def __post_init__(self):
@@ -144,11 +156,15 @@ class ShardSpec:
         if g > s:
             raise ValueError(f"n_device_groups ({g}) cannot exceed "
                              f"n_shards ({s})")
+        if self.pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1, got "
+                             f"{self.pipeline_depth}")
         if self.router == "v1":
             # fail loudly instead of silently ignoring v2-only knobs
             for knob, neutral in (("placement", "contiguous"),
                                   ("max_lane_budget", 0),
-                                  ("n_device_groups", 0)):
+                                  ("n_device_groups", 0),
+                                  ("pipeline_depth", 1)):
                 if getattr(self, knob) != neutral:
                     raise ValueError(
                         f"{knob} is a v2-only knob; the v1 router ignores "
@@ -410,6 +426,80 @@ def crash_and_recover(state: SetState, u: jax.Array, *, sspec: ShardSpec
 # ---------------------------------------------------------------------------
 
 
+class _LazyBatch:
+    """Deferred per-lane results of a pipelined batch (array-like).
+
+    Returned by :class:`ShardedDurableMap` mutators/lookups when
+    ``pipeline_depth > 1``.  Reading it -- ``np.asarray``, iteration,
+    indexing, ``.value()`` -- forces the pipeline up to and including
+    this batch, which is the only host sync on the pipelined path.  A
+    crash that strikes while the batch is still STAGED (stage-1 routed
+    but never dispatched) abandons it: the batch never executed and paid
+    zero psyncs, so recovery legitimately drops it; reading an abandoned
+    handle raises ``RuntimeError``.
+    """
+    __slots__ = ("_owner", "_kind", "_plan", "_default", "_inflight",
+                 "_value", "_present", "_dropped", "_abandoned")
+
+    def __init__(self, owner, kind: str, plan, default: int = 0):
+        self._owner = owner
+        self._kind = kind                 # "apply" | "get"
+        self._plan = plan
+        self._default = default
+        self._inflight = None             # set when dispatched
+        self._value = None
+        self._present = None
+        self._dropped = None
+        self._abandoned = False
+
+    @property
+    def abandoned(self) -> bool:
+        return self._abandoned
+
+    def value(self) -> np.ndarray:
+        """Per-lane results (forces the pipeline through this batch)."""
+        if self._abandoned:
+            raise RuntimeError(
+                "pipelined batch was abandoned by a crash before dispatch "
+                "(never executed, zero psyncs); re-submit it after recovery")
+        if self._value is None:
+            self._owner._force_through(self)
+        return self._value
+
+    @property
+    def present(self) -> np.ndarray:
+        """For get batches: the per-lane presence mask (forces)."""
+        self.value()
+        return self._present
+
+    @property
+    def dropped(self) -> int:
+        """Router-dropped lane count for this batch (forces)."""
+        self.value()
+        return self._dropped
+
+    def __array__(self, dtype=None, copy=None):
+        v = np.asarray(self.value())
+        return v.astype(dtype) if dtype is not None else v
+
+    def __iter__(self):
+        return iter(self.value())
+
+    def __len__(self):
+        return len(self.value())
+
+    def __getitem__(self, i):
+        return self.value()[i]
+
+    def __repr__(self):
+        if self._abandoned:
+            return "_LazyBatch(abandoned)"
+        if self._value is None:
+            stage = "staged" if self._inflight is None else "in-flight"
+            return f"_LazyBatch({self._kind}, {stage})"
+        return f"_LazyBatch({self._kind}, forced={self._value!r})"
+
+
 class ShardedDurableMap:
     """DurableMap façade over S independent shards (single-controller).
 
@@ -435,7 +525,8 @@ class ShardedDurableMap:
             shard_kw = {k: spec_kwargs.pop(k)
                         for k in ("router", "placement", "lane_factor",
                                   "min_lane_budget", "max_lane_budget",
-                                  "n_device_groups", "use_shard_map")
+                                  "n_device_groups", "pipeline_depth",
+                                  "use_shard_map")
                         if k in spec_kwargs}
             if spec is None:
                 spec = SetSpec(**spec_kwargs)
@@ -452,6 +543,9 @@ class ShardedDurableMap:
         self.last_recovery_hist_shards = None  # i32[S, 5]
         self.router_dropped = 0
         self.last_route = None                # v2: stage-1 RoutePlan
+        self.pipeline_abandoned = 0           # staged batches lost to crash
+        self._staged = None                   # routed, not yet dispatched
+        self._pending = []                    # dispatched, not yet forced
         self._overflow_warned = False
         self._dropped_warned = False
 
@@ -468,9 +562,10 @@ class ShardedDurableMap:
     def overflowed(self) -> bool:
         """True once ANY shard latched its index overflow (see
         ``DurableMap.overflowed``)."""
+        self._dispatch_staged()
         return bool(self.state.overflow.any())
 
-    def _finish(self, res, dropped):
+    def _finish(self, res, dropped, check_overflow: bool = True):
         d = int(dropped)
         if d:
             self.router_dropped += d
@@ -484,7 +579,10 @@ class ShardedDurableMap:
                     f"received more than the lane budget; {knob} "
                     f"or submit smaller batches (sspec={self.sspec})",
                     stacklevel=4)
-        if not self._overflow_warned and self.overflowed:
+        # the overflow latch lives in device state; checking it forces a
+        # sync on EVERY dispatched batch, so the pipelined path defers it
+        # to pipeline_flush() instead of checking per forced batch
+        if check_overflow and not self._overflow_warned and self.overflowed:
             self._overflow_warned = True
             E.warn_structure(
                 f"ShardedDurableMap index overflow latched on a shard "
@@ -492,7 +590,72 @@ class ShardedDurableMap:
                 "capacity, stash_size, or n_shards", stacklevel=4)
         return res
 
+    # -- double-buffered pipeline (pipeline_depth > 1) ---------------------
+    #
+    # The newest batch is STAGED (stage-1 routed host-side, not yet
+    # dispatched); up to depth-1 older batches are dispatched but not yet
+    # forced.  Submitting batch n first pushes the staged batch n-1 to the
+    # device (async), then runs stage 1 of batch n on the host WHILE the
+    # device executes -- the double buffering the ROADMAP calls for.
+    # Batch order is strictly FIFO, so linearization, results, state, and
+    # psync counters are bit-identical to the synchronous path
+    # (tests/test_pipeline.py).  A crash abandons only the staged batch:
+    # it never executed and paid zero psyncs, so recovery drops exactly
+    # the uncommitted in-flight work and nothing else.
+
+    def _submit(self, kind, ops, keys, values, default: int = 0):
+        self._dispatch_staged()               # batch n-1 starts executing
+        if kind == "get":
+            keys = np.asarray(keys, np.int32)
+            ops = np.full(keys.shape, OP_CONTAINS, np.int32)
+            values = keys
+        plan = RT.host_route(self.sspec, ops, keys, values)  # overlaps
+        handle = _LazyBatch(self, kind, plan, default)
+        self._staged = handle
+        self.last_route = plan
+        while len(self._pending) > self.sspec.pipeline_depth - 1:
+            self._force_oldest()
+        return handle
+
+    def _dispatch_staged(self):
+        h = self._staged
+        if h is None:
+            return
+        self._staged = None
+        self.state, h._inflight = RT.dispatch_plan(
+            self.state, h._plan, sspec=self.sspec, kind=h._kind,
+            default=h._default)
+        self._pending.append(h)
+
+    def _force_oldest(self):
+        h = self._pending.pop(0)
+        out = h._inflight.force()
+        if h._kind == "apply":
+            h._value, h._dropped = out
+        else:
+            h._value, h._present, h._dropped = out
+        self._finish(h._value, h._dropped, check_overflow=False)
+
+    def _force_through(self, handle):
+        """Force the pipeline, in submit order, through ``handle``."""
+        if handle is self._staged:
+            self._dispatch_staged()
+        while self._pending and handle._value is None \
+                and not handle._abandoned:
+            self._force_oldest()
+
+    def pipeline_flush(self):
+        """Dispatch the staged batch, force every pending batch, and run
+        the deferred overflow check.  The no-op on a synchronous map."""
+        self._dispatch_staged()
+        while self._pending:
+            self._force_oldest()
+        self._finish(None, 0)                 # deferred overflow check
+        return self
+
     def _apply(self, ops, keys, values):
+        if self.sspec.pipeline_depth > 1:
+            return self._submit("apply", ops, keys, values)
         self.state, res, dropped, plan = dispatch_batch(
             self.state, ops, keys, values, sspec=self.sspec)
         if plan is not None:
@@ -517,6 +680,8 @@ class ShardedDurableMap:
 
     def get(self, keys, default: int = 0):
         """Values for present keys, ``default`` otherwise."""
+        if self.sspec.pipeline_depth > 1:
+            return self._submit("get", None, keys, None, default)
         self.state, vals, _, dropped, plan = dispatch_get(
             self.state, np.asarray(keys, np.int32), sspec=self.sspec,
             default=default)
@@ -533,16 +698,37 @@ class ShardedDurableMap:
     def precompile(self, batch: int):
         """Trace/compile the v2 stage-2 program for every lane budget the
         adaptive chooser can pick for ``batch``-lane batches (exact no-op
-        on the map's contents).  Returns the tuple of budgets compiled."""
+        on the map's contents).  With ``pipeline_depth > 1`` this also
+        covers every smaller pow2 Bd bucket a padded wave can realize, so
+        the first pipelined batch never pays a trace stall mid-serve.
+        Returns the tuple of budgets compiled."""
         if self.sspec.router != "v2":
             return ()
+        self._dispatch_staged()               # keep FIFO order intact
         self.state, budgets = RT.precompile(self.state, batch,
                                             sspec=self.sspec)
         return budgets
 
     def crash_and_recover(self, u=None, seed: int = 0):
         """Crash all shards and rebuild in one vmapped recovery dispatch.
-        ``u`` defaults to an INDEPENDENT uniform adversary per shard."""
+        ``u`` defaults to an INDEPENDENT uniform adversary per shard.
+
+        Pipelined maps: a batch still STAGED at crash time was never
+        dispatched -- it executed nothing and paid zero psyncs, so it is
+        ABANDONED (its handle raises on read, ``pipeline_abandoned``
+        counts it) and recovery proceeds without it.  Already-dispatched
+        batches are committed work: their psyncs were issued inside the
+        jitted program, so they are forced (completing normally) before
+        the crash is applied -- exactly the crash-at-any-point semantics
+        of the synchronous path.
+        """
+        if self._staged is not None:
+            h, self._staged = self._staged, None
+            RT.release_plan(h._plan)
+            h._abandoned = True
+            self.pipeline_abandoned += 1
+        while self._pending:
+            self._force_oldest()
         if u is None:
             u = np.random.default_rng(seed).random(
                 self.state.cur.shape).astype(np.float32)
@@ -556,13 +742,18 @@ class ShardedDurableMap:
 
     @property
     def psyncs(self):
+        # dispatch the staged batch first so the counters reflect every
+        # submitted batch -- identical to what a synchronous read would see
+        self._dispatch_staged()
         return int(self.state.n_psync.sum())
 
     @property
     def ops(self):
+        self._dispatch_staged()
         return int(self.state.n_ops.sum())
 
     def __len__(self):
+        self._dispatch_staged()
         return int(self.state.size.sum())
 
     def __repr__(self):

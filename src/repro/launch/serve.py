@@ -21,9 +21,17 @@ loses no acknowledged request: it is either still live in the request
 queue (will be re-served; the registry dedups re-delivery) or already in
 the registry.  --crash drills exactly that invariant end to end.
 
+--pipeline N (requires --shards > 1) serves the requests in waves through
+the depth-N double-buffered registry (DESIGN.md §6): wave k+1's durable
+ack enqueues and wave k+1's host stage-1 routing run WHILE wave k
+generates on device; each wave's pipelined registry insert is flushed
+durable before that wave's dequeue commit, so the spine's
+no-acknowledged-request-lost ordering (and its exact 4 psyncs/request
+bill) is preserved verbatim under pipelining.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b-smoke \
       --requests 8 --gen 16 [--crash] [--backend bucket] [--shards 8] \
-      [--queue] [--queue-capacity 1024]
+      [--queue] [--queue-capacity 1024] [--pipeline 2]
 """
 from __future__ import annotations
 
@@ -73,7 +81,19 @@ def main(argv=None):
                          "commit (DESIGN.md §7)")
     ap.add_argument("--queue-capacity", type=int, default=1024,
                     help="ring slots per spine queue (power of two)")
+    ap.add_argument("--pipeline", type=int, default=1,
+                    help="registry pipeline depth (DESIGN.md §6): > 1 "
+                         "serves the requests in WAVES through the "
+                         "double-buffered sharded registry -- with "
+                         "--queue, wave k+1's durable ack enqueues while "
+                         "wave k generates on device; requires --shards "
+                         "> 1")
     args = ap.parse_args(argv)
+    if args.pipeline < 1:
+        ap.error("--pipeline must be >= 1")
+    if args.pipeline > 1 and args.shards <= 1:
+        ap.error("--pipeline > 1 requires --shards > 1 (the pipelined "
+                 "dispatch path lives in the sharded registry router)")
 
     cfg = get_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -86,7 +106,11 @@ def main(argv=None):
         registry = ShardedDurableMap(spec, n_shards=args.shards,
                                      router=args.router,
                                      placement=args.placement,
-                                     max_lane_budget=args.max_lane_budget)
+                                     max_lane_budget=args.max_lane_budget,
+                                     pipeline_depth=args.pipeline)
+        # pipeline_depth > 1 makes this a PARTIAL precompile too: every
+        # pow2 sub-batch bucket a padded wave can realize is traced, so
+        # the first pipelined wave never pays a trace stall mid-serve
         budgets = registry.precompile(args.requests)
         if budgets:
             print(f"registry router v2: pre-compiled lane budgets "
@@ -100,46 +124,90 @@ def main(argv=None):
     if args.queue:
         qspec = QueueSpec(capacity=args.queue_capacity, mode="soft")
         req_q, resp_q = DurableQueue(qspec), DurableQueue(qspec)
-        # 1. durable admission: the ack psync makes the request survivable
-        acked = np.asarray(req_q.enqueue(req_ids))
-        assert acked.all(), "admission queue full"
-        print(f"spine: acknowledged {int(acked.sum())} requests durably "
-              f"(req-queue psyncs={req_q.psyncs})")
-        # 2. volatile peek of the batch being served (zero psync)
-        served_ids, ok = req_q.peek(b)
-        assert ok.all()
-        np.testing.assert_array_equal(served_ids, req_ids)
 
     max_seq = args.prompt_len + args.gen
     rng = np.random.default_rng(0)
-    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, args.prompt_len)),
-                       jnp.int32)
-    batch = {"tokens": toks}
+    all_toks = rng.integers(0, cfg.vocab, (b, args.prompt_len))
+
+    def generate(tok_rows):
+        """Prefill + decode one wave.  Returns the generated tokens as
+        DEVICE arrays -- no host sync -- so host-side spine work (the
+        next wave's durable ack) can overlap device execution."""
+        caches = M.init_cache(cfg, len(tok_rows), max_seq)
+        caches, logits = prefill_step(
+            params, {"tokens": jnp.asarray(tok_rows, jnp.int32)}, caches)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        out = [nxt]
+        for _ in range(args.gen - 1):
+            caches, nxt, logits = decode_step(params, caches, nxt)
+            out.append(nxt)
+        return jnp.concatenate(out, axis=1)
 
     t0 = time.time()
-    caches = M.init_cache(cfg, b, max_seq)
-    caches, logits = prefill_step(params, batch, caches)
-    nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    out = [nxt]
-    for _ in range(args.gen - 1):
-        caches, nxt, logits = decode_step(params, caches, nxt)
-        out.append(nxt)
-    gen = jnp.concatenate(out, axis=1)
-    jax.block_until_ready(gen)
-    dt = time.time() - t0
-    print(f"served {b} requests x {args.gen} tokens in {dt:.2f}s "
-          f"({b * args.gen / dt:.1f} tok/s)")
+    if args.pipeline == 1:
+        if args.queue:
+            # 1. durable admission: the ack psync makes it survivable
+            acked = np.asarray(req_q.enqueue(req_ids))
+            assert acked.all(), "admission queue full"
+            print(f"spine: acknowledged {int(acked.sum())} requests "
+                  f"durably (req-queue psyncs={req_q.psyncs})")
+            # 2. volatile peek of the batch being served (zero psync)
+            served_ids, ok = req_q.peek(b)
+            assert ok.all()
+            np.testing.assert_array_equal(served_ids, req_ids)
+        gen = generate(all_toks)
+        jax.block_until_ready(gen)
+        dt = time.time() - t0
+        print(f"served {b} requests x {args.gen} tokens in {dt:.2f}s "
+              f"({b * args.gen / dt:.1f} tok/s)")
 
-    # durably record completions: one psync per request (SOFT bound).
-    # Spine order (--queue): response enqueue -> registry insert -> request
-    # dequeue COMMIT -- the dequeue's psync happens only after the
-    # completion is durable, so no acknowledged request can be lost.
+        # durably record completions: one psync per request (SOFT bound).
+        # Spine order (--queue): response enqueue -> registry insert ->
+        # request dequeue COMMIT -- the dequeue's psync happens only after
+        # the completion is durable, so no acknowledged request is lost.
+        if args.queue:
+            resp_q.enqueue(req_ids)
+        registry.insert(req_ids, np.asarray(gen[:, -1]))
+        if args.queue:
+            _, committed = req_q.dequeue(b)
+            assert committed.all()
+    else:
+        # Depth-N pipelined waves (DESIGN.md §6): wave k generates on
+        # device while the host runs wave k+1's durable ack and stage-1
+        # routing.  Spine ordering survives verbatim per wave -- the
+        # pipelined registry insert is FLUSHED (forced durable) before
+        # that wave's dequeue commit, so a crash at any point still
+        # leaves every acknowledged request in the queue or registry.
+        waves = [w for w in np.array_split(np.arange(b),
+                                           min(b, 2 * args.pipeline))
+                 if len(w)]
+        if args.queue:
+            acked = np.asarray(req_q.enqueue(req_ids[waves[0]]))
+            assert acked.all(), "admission queue full"
+        for k, idx in enumerate(waves):
+            ids = req_ids[idx]
+            if args.queue:
+                served_ids, ok = req_q.peek(len(ids))   # volatile, 0 psync
+                assert np.asarray(ok).all()
+                np.testing.assert_array_equal(served_ids, ids)
+            gen_w = generate(all_toks[idx])             # async, on device
+            if args.queue and k + 1 < len(waves):
+                # wave k+1's durable ack rides wave k's device bubble
+                acked = np.asarray(req_q.enqueue(req_ids[waves[k + 1]]))
+                assert acked.all(), "admission queue full"
+            last = np.asarray(gen_w)[:, -1]             # force wave k
+            if args.queue:
+                resp_q.enqueue(ids)
+            registry.insert(ids, last)                  # staged, lazy
+            registry.pipeline_flush()   # durable BEFORE dequeue commit
+            if args.queue:
+                _, committed = req_q.dequeue(len(ids))
+                assert np.asarray(committed).all()
+        dt = time.time() - t0
+        print(f"served {b} requests x {args.gen} tokens in {len(waves)} "
+              f"waves (depth-{args.pipeline} registry pipeline) in "
+              f"{dt:.2f}s ({b * args.gen / dt:.1f} tok/s)")
     if args.queue:
-        resp_q.enqueue(req_ids)
-    registry.insert(req_ids, np.asarray(gen[:, -1]))
-    if args.queue:
-        _, committed = req_q.dequeue(b)
-        assert committed.all()
         print(f"spine: {len(resp_q)} completions enqueued, request queue "
               f"drained (len={len(req_q)}), total spine psyncs="
               f"{req_q.psyncs + resp_q.psyncs}")

@@ -1,0 +1,351 @@
+"""Double-buffered router pipeline conformance suite (DESIGN.md §6).
+
+The pipelined dispatch path (``ShardSpec.pipeline_depth > 1``) overlaps
+host stage-1 routing of batch n+1 with device execution of batch n and
+defers the gather-back until a caller reads the results.  Because every
+routing artifact is volatile (NVTraverse: traverse volatile, persist the
+destination), the overlap changes no durability obligation -- this suite
+pins that claim:
+
+  1. CONFORMANCE -- depth-2/3 pipelined execution is bit-identical
+     (per-batch results, final state, psync/op counters) to the
+     synchronous v2 path across probe/scan/bucket, any logical device
+     grouping, mixed apply + get traces (hypothesis property + seeded
+     fallback + deterministic mode sweep).
+  2. CRASH -- a crash mid-pipeline abandons ONLY the staged
+     (never-dispatched, zero-psync) batch: recovery state is bit-equal
+     to a synchronous run of exactly the dispatched prefix, the
+     abandoned handle raises on read, and psync accounting stays exact.
+  3. SCRATCH -- steady-state host routing performs no grid allocation
+     (the per-geometry scratch pool recycles; allocation-count
+     regression).
+  4. NO TRACE STALL -- after ``precompile`` a pipelined map serves
+     padded waves of any real-lane count without a single new trace of
+     the stage-2 programs.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (ShardedDurableMap, SetSpec, ShardSpec,
+                        OP_CONTAINS, OP_INSERT, OP_NOP, OP_REMOVE)
+from repro.core import router as RT
+
+try:        # dev-only dependency: property test degrades to a seeded sweep
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+BACKENDS = ("probe", "scan", "bucket")
+_BATCH = 8
+
+
+def _pair(backend, mode="soft", *, depth=2, n_shards=8, groups=0,
+          capacity=256):
+    """(pipelined, synchronous) map pair over the same geometry."""
+    base = SetSpec(capacity=capacity, mode=mode, backend=backend)
+    pipe = ShardedDurableMap(base, n_shards=n_shards, pipeline_depth=depth,
+                             n_device_groups=groups)
+    sync = ShardedDurableMap(base, n_shards=n_shards, n_device_groups=groups)
+    return pipe, sync
+
+
+def _assert_state_identical(a, b):
+    for la, lb in zip(jax.tree.leaves(a.state), jax.tree.leaves(b.state)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _trace_batches(trace):
+    """Chunk an (op, key) trace into fixed-width padded batches."""
+    batches = []
+    for i in range(0, len(trace), _BATCH):
+        chunk = trace[i:i + _BATCH]
+        codes = np.full(_BATCH, OP_NOP, np.int32)
+        keys = np.zeros(_BATCH, np.int32)
+        for j, (code, key) in enumerate(chunk):
+            codes[j], keys[j] = code, key
+        batches.append((codes, keys))
+    return batches
+
+
+def _check_pipeline_conformance(backend, depth, groups, trace, with_get):
+    """Pipelined execution == synchronous: same per-batch results, same
+    state, same psync counters -- batches forced only at the end."""
+    pipe, sync = _pair(backend, depth=depth, groups=groups)
+    handles = []
+    for codes, keys in _trace_batches(trace):
+        got_sync = np.array(sync.apply(codes, keys, keys * 7))
+        handles.append((got_sync, pipe.apply(codes, keys, keys * 7)))
+        if with_get:
+            gs = np.array(sync.get(keys, default=-3))
+            handles.append((gs, pipe.get(keys, default=-3)))
+    pipe.pipeline_flush()
+    for got_sync, h in handles:
+        np.testing.assert_array_equal(got_sync, np.array(h))
+    assert pipe.psyncs == sync.psyncs
+    assert pipe.ops == sync.ops
+    assert len(pipe) == len(sync)
+    assert pipe.router_dropped == 0 and pipe.pipeline_abandoned == 0
+    _assert_state_identical(pipe, sync)
+
+
+if HAVE_HYPOTHESIS:
+    trace_strategy = st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 31)),  # incl. OP_NOP
+        min_size=1, max_size=32)
+
+    @settings(max_examples=25, deadline=None)
+    @given(backend=st.sampled_from(BACKENDS),
+           depth=st.sampled_from((2, 3)),
+           groups=st.sampled_from((0, 2, 4)),
+           with_get=st.booleans(),
+           trace=trace_strategy)
+    def test_pipeline_bit_identical_to_sync(backend, depth, groups,
+                                            with_get, trace):
+        _check_pipeline_conformance(backend, depth, groups, trace, with_get)
+else:                                                 # pragma: no cover
+    @pytest.mark.parametrize("seed", range(8))
+    def test_pipeline_bit_identical_to_sync(seed):
+        rng = np.random.default_rng(seed)
+        trace = [(int(c), int(k)) for c, k in
+                 zip(rng.integers(0, 4, 24), rng.integers(0, 32, 24))]
+        _check_pipeline_conformance(BACKENDS[seed % 3], (2, 3)[seed % 2],
+                                    (0, 2, 4)[seed % 3], trace,
+                                    bool(seed % 2))
+
+
+@pytest.mark.parametrize("mode", ("soft", "linkfree", "logfree"))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_pipeline_conformance_modes_with_recovery(backend, mode):
+    """Deterministic sweep over psync modes: a longer trace with a
+    mid-trace (flushed) crash+recovery stays bit-identical, and the SOFT
+    per-update psync bound survives the pipeline."""
+    rng = np.random.default_rng(3)
+    pipe, sync = _pair(backend, mode, depth=2, groups=4, capacity=256)
+    for r in range(6):
+        ops = rng.integers(0, 3, 16).astype(np.int32)
+        keys = rng.integers(0, 96, 16).astype(np.int32)
+        hp = pipe.apply(ops, keys, keys * 2)
+        hs = np.array(sync.apply(ops, keys, keys * 2))
+        np.testing.assert_array_equal(np.array(hp), hs)
+        if r == 3:
+            pipe.crash_and_recover(seed=11)
+            sync.crash_and_recover(seed=11)
+            assert pipe.pipeline_abandoned == 0   # nothing staged: forced
+    probe = np.arange(96)
+    np.testing.assert_array_equal(np.array(pipe.contains(probe)),
+                                  np.array(sync.contains(probe)))
+    pipe.pipeline_flush()
+    assert pipe.psyncs == sync.psyncs and pipe.ops == sync.ops
+    _assert_state_identical(pipe, sync)
+
+
+# ---------------------------------------------------------------------------
+# 2. Crash mid-pipeline: only the staged batch is abandoned.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("crash_at", (1, 2, 4))
+def test_crash_abandons_only_staged_batch(backend, crash_at):
+    """Kill the pipeline after ``crash_at`` submits: every batch that was
+    dispatched is committed (its psyncs were issued), the one staged
+    batch is abandoned with zero side effects, and recovery lands
+    bit-identical to a synchronous run of exactly the dispatched
+    prefix."""
+    rng = np.random.default_rng(crash_at)
+    batches = [(rng.integers(0, 3, 12).astype(np.int32),
+                rng.integers(0, 64, 12).astype(np.int32))
+               for _ in range(crash_at)]
+    base = SetSpec(capacity=256, backend=backend)
+    pipe = ShardedDurableMap(base, n_shards=8, pipeline_depth=2)
+    ref = ShardedDurableMap(base, n_shards=8)
+    handles = [pipe.apply(o, k, k * 5) for o, k in batches]
+    # everything but the newest submit has been dispatched == committed
+    for o, k in batches[:-1]:
+        ref.apply(o, k, k * 5)
+    pipe.crash_and_recover(seed=99)
+    ref.crash_and_recover(seed=99)
+    assert pipe.pipeline_abandoned == 1
+    assert handles[-1].abandoned
+    with pytest.raises(RuntimeError, match="abandoned"):
+        handles[-1].value()
+    with pytest.raises(RuntimeError, match="abandoned"):
+        np.array(handles[-1])
+    # committed batches forced normally during the crash
+    for h in handles[:-1]:
+        assert not h.abandoned and h.value() is not None
+    assert pipe.psyncs == ref.psyncs and pipe.ops == ref.ops
+    assert len(pipe) == len(ref)
+    _assert_state_identical(pipe, ref)
+    # the recovered map keeps serving (pipelined) and stays conformant
+    probe = np.arange(64)
+    np.testing.assert_array_equal(np.array(pipe.contains(probe)),
+                                  np.array(ref.contains(probe)))
+
+
+def test_crash_after_flush_abandons_nothing():
+    pipe, sync = _pair("bucket")
+    keys = np.arange(1, 20, dtype=np.int32)
+    pipe.insert(keys, keys)
+    sync.insert(keys, keys)
+    pipe.pipeline_flush()
+    pipe.crash_and_recover(seed=5)
+    sync.crash_and_recover(seed=5)
+    assert pipe.pipeline_abandoned == 0
+    assert pipe.psyncs == sync.psyncs
+    _assert_state_identical(pipe, sync)
+
+
+def test_soft_psync_parity_under_pipeline():
+    """SOFT accounting through the pipeline: exactly 1 psync per
+    successful update, 0 per read, 0 for the abandoned staged batch."""
+    m = ShardedDurableMap(SetSpec(capacity=512, mode="soft"), n_shards=8,
+                          pipeline_depth=2)
+    keys = np.arange(100, 164, dtype=np.int32)
+    m.insert(keys, keys)                  # 64 fresh inserts
+    m.contains(keys)                      # reads: 0 psyncs
+    m.insert(keys[:16], keys[:16])        # duplicate inserts: fail, 0
+    m.remove(keys[:32])                   # 32 successful removes
+    m.pipeline_flush()
+    assert m.psyncs == 64 + 32
+    h = m.insert(np.arange(500, 516, dtype=np.int32))   # staged only
+    m.crash_and_recover(seed=1)
+    assert h.abandoned
+    # counters are volatile (reset by the crash); the abandoned batch left
+    # no trace in durable state: its keys were never inserted.
+    assert m.psyncs == 0
+    assert not np.array(m.contains(np.arange(500, 516))).any()
+    assert len(m) == 64 - 32
+
+
+# ---------------------------------------------------------------------------
+# 3. Host-scratch reuse: steady state allocates no grids.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("depth", (1, 2, 3))
+def test_host_route_scratch_steady_state_allocates_nothing(depth):
+    """After warmup at a fixed geometry, repeated batches acquire only
+    recycled scratch sets: the pool's grid_allocs counter stays flat
+    (the allocation-count regression guard for host_route/host_gather)."""
+    m = ShardedDurableMap(SetSpec(capacity=4096), n_shards=8,
+                          pipeline_depth=depth, n_device_groups=4)
+    rng = np.random.default_rng(0)
+
+    def round_():
+        keys = rng.integers(0, 10_000, 32).astype(np.int32)
+        m.insert(keys, keys)
+        m.get(keys)
+    for _ in range(depth + 2):            # warm the pool at this geometry
+        round_()
+    m.pipeline_flush()
+    allocs0 = RT.scratch_stats()["grid_allocs"]
+    for _ in range(10):
+        round_()
+    m.pipeline_flush()
+    stats = RT.scratch_stats()
+    assert stats["grid_allocs"] == allocs0, (
+        f"steady-state routing allocated fresh grids: {stats}")
+    assert stats["acquires"] > allocs0    # and the pool was actually used
+
+
+def test_scratch_pool_isolation_across_geometries():
+    """Different (D, Bd, B) geometries get distinct scratch sets; plans
+    in flight never share buffers (the pipelined path depends on it)."""
+    m = ShardedDurableMap(SetSpec(capacity=512), n_shards=8,
+                          pipeline_depth=3)
+    h8 = m.insert(np.arange(8, dtype=np.int32))
+    h16 = m.insert(np.arange(100, 116, dtype=np.int32))
+    h8b = m.insert(np.arange(50, 58, dtype=np.int32))
+    assert np.array(h8).all() and np.array(h16).all() and np.array(h8b).all()
+    assert len(m) == 32
+
+
+# ---------------------------------------------------------------------------
+# 4. Precompile covers the pipelined variants: no mid-serve trace stall.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("groups", (0, 4))
+def test_precompile_no_trace_stall_for_padded_waves(groups):
+    """After precompile(B), padded waves of ANY real-lane count (the
+    pipelined serving shape) hit only pre-traced (Bd, lane_budget)
+    combinations -- the stage-2 jit caches do not grow."""
+    m = ShardedDurableMap(SetSpec(capacity=1024), n_shards=8,
+                          pipeline_depth=2, n_device_groups=groups)
+    budgets = m.precompile(64)
+    assert budgets == RT.budget_candidates(m.sspec, 64)
+    n0 = (RT._apply_v2._cache_size(), RT._get_v2._cache_size())
+    rng = np.random.default_rng(1)
+    for real in (64, 33, 17, 8, 3, 1):
+        ops = np.full(64, OP_NOP, np.int32)
+        ops[:real] = OP_INSERT
+        keys = rng.integers(0, 10**6, 64).astype(np.int32)
+        m.apply(ops, keys, keys)
+        m.get(keys)
+    m.pipeline_flush()
+    n1 = (RT._apply_v2._cache_size(), RT._get_v2._cache_size())
+    assert n0 == n1, f"pipelined serve re-traced: {n0} -> {n1}"
+
+
+def test_precompile_partial_is_noop_on_state():
+    m = ShardedDurableMap(SetSpec(capacity=512), n_shards=8,
+                          pipeline_depth=2)
+    m.insert([1, 2, 3])
+    m.pipeline_flush()
+    p0, o0, n0 = m.psyncs, m.ops, len(m)
+    before = [np.asarray(x).copy() for x in jax.tree.leaves(m.state)]
+    m.precompile(32)
+    assert (m.psyncs, m.ops, len(m)) == (p0, o0, n0)
+    for la, lb in zip(before, jax.tree.leaves(m.state)):
+        np.testing.assert_array_equal(la, np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# Lazy handle semantics + spec plumbing.
+# ---------------------------------------------------------------------------
+
+
+def test_lazy_handle_is_array_like():
+    m = ShardedDurableMap(SetSpec(capacity=128), n_shards=4,
+                          pipeline_depth=2)
+    h = m.insert([1, 2, 3], [10, 20, 30])
+    g = m.get([1, 2, 9], default=-1)
+    assert list(h) == [True, True, True]
+    assert len(g) == 3 and g[0] == 10
+    assert g.dropped == 0
+    np.testing.assert_array_equal(g.present, [True, True, False])
+    np.testing.assert_array_equal(np.asarray(g, dtype=np.int64),
+                                  [10, 20, -1])
+
+
+def test_properties_account_for_staged_batch():
+    """Reading psyncs/ops/len dispatches the staged batch first, so the
+    counters always reflect every submitted batch (sync semantics)."""
+    m = ShardedDurableMap(SetSpec(capacity=128), n_shards=4,
+                          pipeline_depth=2)
+    m.insert([1, 2, 3])
+    assert m.psyncs == 3 and len(m) == 3 and m.ops == 3
+
+
+def test_empty_batch_through_pipeline():
+    m = ShardedDurableMap(SetSpec(capacity=128), n_shards=4,
+                          pipeline_depth=2)
+    h = m.insert(np.zeros((0,), np.int32))
+    assert np.array(h).shape == (0,)
+    m.pipeline_flush()
+    assert len(m) == 0
+
+
+def test_pipeline_depth_validation():
+    base = SetSpec(capacity=64)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        ShardSpec(base=base, pipeline_depth=0)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        ShardSpec(base=base, router="v1", pipeline_depth=2)
+    # depth 1 stays the fully synchronous path: plain numpy results
+    m = ShardedDurableMap(base, n_shards=4)
+    assert isinstance(m.insert([1]), np.ndarray)

@@ -21,7 +21,8 @@ asserts exactly-once completion.
 import numpy as np
 import pytest
 
-from repro.core import DurableMap, DurableQueue, QueueSpec, SetSpec
+from repro.core import (DurableMap, DurableQueue, QueueSpec, SetSpec,
+                        ShardedDurableMap)
 
 STEPS = ("after_ack", "after_peek", "after_resp_enqueue",
          "after_registry_insert", "after_dequeue_commit")
@@ -142,3 +143,67 @@ def test_spine_psync_bound():
     total = req_q.psyncs + resp_q.psyncs + registry.psyncs
     assert total == 4 * len(ids), (req_q.psyncs, resp_q.psyncs,
                                    registry.psyncs)
+
+
+def test_pipelined_spine_exactly_once_and_psync_bound():
+    """The ``serve.py --pipeline`` wave loop (DESIGN.md §6): wave k+1's
+    durable ack enqueues while wave k "generates", and each wave's
+    pipelined registry insert is flushed durable BEFORE that wave's
+    dequeue commit.  Exactly-once completion and the exact 4
+    psyncs/request bill survive pipelining unchanged."""
+    qspec = QueueSpec(capacity=32)
+    req_q, resp_q = DurableQueue(qspec), DurableQueue(qspec)
+    registry = ShardedDurableMap(SetSpec(capacity=128), n_shards=4,
+                                 pipeline_depth=2)
+    ids = np.arange(300, 316, dtype=np.int32)
+    waves = np.array_split(ids, 4)
+    assert np.asarray(req_q.enqueue(waves[0])).all()
+    for k, wave in enumerate(waves):
+        served, ok = req_q.peek(len(wave))          # volatile, zero psync
+        np.testing.assert_array_equal(served[np.asarray(ok)], wave)
+        if k + 1 < len(waves):   # ack wave k+1 during wave k's generation
+            assert np.asarray(req_q.enqueue(waves[k + 1])).all()
+        resp_q.enqueue(wave)
+        registry.insert(wave, _process(wave))       # staged, lazy
+        registry.pipeline_flush()   # durable BEFORE the dequeue commit
+        _, committed = req_q.dequeue(len(wave))
+        assert np.asarray(committed).all()
+    total = req_q.psyncs + resp_q.psyncs + registry.psyncs
+    assert total == 4 * len(ids), (req_q.psyncs, resp_q.psyncs,
+                                   registry.psyncs)
+    assert len(registry) == len(ids) and len(req_q) == 0
+    assert np.array(registry.contains(ids)).all()
+
+
+def test_pipelined_spine_crash_before_flush_loses_nothing():
+    """Crash with a wave's registry insert still STAGED (after response
+    enqueue, before flush + dequeue commit): the staged insert is
+    abandoned psync-free, the wave is still live in the recovered request
+    queue -- because its dequeue never committed -- and the redelivery
+    drain completes it exactly once."""
+    rng = np.random.default_rng(7)
+    qspec = QueueSpec(capacity=16)
+    req_q, resp_q = DurableQueue(qspec), DurableQueue(qspec)
+    registry = ShardedDurableMap(SetSpec(capacity=128), n_shards=4,
+                                 pipeline_depth=2)
+    done = np.arange(400, 404, dtype=np.int32)   # wave 0 completes fully
+    assert np.asarray(req_q.enqueue(done)).all()
+    resp_q.enqueue(done)
+    registry.insert(done, _process(done))
+    registry.pipeline_flush()
+    _, committed = req_q.dequeue(len(done))
+    assert np.asarray(committed).all()
+    live = np.arange(404, 408, dtype=np.int32)   # wave 1 crashes mid-wave
+    assert np.asarray(req_q.enqueue(live)).all()
+    resp_q.enqueue(live)
+    h = registry.insert(live, _process(live))    # staged, NOT yet durable
+    n = req_q.spec.capacity
+    req_q.crash_and_recover(u=rng.random(n).astype(np.float32))
+    resp_q.crash_and_recover(u=rng.random(n).astype(np.float32))
+    registry.crash_and_recover()
+    assert h.abandoned and registry.pipeline_abandoned == 1
+    assert len(req_q) == len(live), "uncommitted wave must stay live"
+    _drain(req_q, resp_q, registry)
+    all_ids = np.concatenate([done, live])
+    assert np.array(registry.contains(all_ids)).all()
+    assert len(registry) == len(all_ids) and len(req_q) == 0
