@@ -16,6 +16,8 @@ import jax
 
 from benchmarks.common import run_workload, fmt_row
 
+from repro.obs.meta import bench_meta
+
 MODES = ("soft", "linkfree", "logfree")
 BACKENDS = ("probe", "bucket")
 
@@ -27,6 +29,7 @@ def run(quick: bool = False, out: str = OUT):
         else (65536, 65536, 1024, 90)
     rounds = 5 if quick else 10
     payload = {
+        "meta": bench_meta(),
         "config": {"capacity": cap, "key_range": kr, "batch": batch,
                    "read_pct": read_pct, "rounds": rounds, "quick": quick,
                    "jax": jax.__version__,

@@ -25,6 +25,8 @@ from benchmarks.common import Result, fmt_row
 from repro.core import queue as Q
 from repro.core.queue import QueueSpec
 
+from repro.obs.meta import bench_meta
+
 MODES = ("soft", "linkfree", "logfree")
 
 OUT = "BENCH_queue.json"
@@ -100,6 +102,7 @@ def run(quick: bool = False, out: str = OUT):
     cap, batch = (4096, 256) if quick else (65536, 1024)
     rounds = 5 if quick else 10
     payload = {
+        "meta": bench_meta(),
         "config": {"capacity": cap, "batch": batch, "rounds": rounds,
                    "quick": quick, "jax": jax.__version__,
                    "device": jax.devices()[0].platform,

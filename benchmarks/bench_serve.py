@@ -1,0 +1,32 @@
+"""Open-loop serving benchmark wrapper -> ``BENCH_serve.json``.
+
+The driver itself lives in :mod:`repro.launch.bench_serve` (it composes
+the full request/completion spine, which is launch-layer machinery);
+this wrapper registers it with ``benchmarks/run.py`` so CI and manual
+sweeps invoke it like every other suite.  ``--quick`` selects the 20 s
+CI smoke shape; the default is the committed >= 60 s run at the 2^20
+registry capacity.  ``benchmarks/check_regression.py`` floors the
+artifact (p99 ceiling + exact per-structure psync-per-op ceilings).
+"""
+from __future__ import annotations
+
+import json
+
+from repro.launch import bench_serve as _driver
+
+OUT = "BENCH_serve.json"
+
+
+def run(quick: bool = False, out: str = OUT):
+    _driver.main(["--out", out] + (["--quick"] if quick else []))
+    with open(out) as f:
+        p = json.load(f)
+    lat = p["latency"]
+    rows = [
+        (f"bench_serve_open_loop,{1e6 / max(p['ops_per_sec'], 1e-9):.3f},"
+         f"ops_per_sec={p['ops_per_sec']:.0f};"
+         f"p50_ms={lat['p50_ms']:.3f};p99_ms={lat['p99_ms']:.3f};"
+         f"p999_ms={lat['p999_ms']:.3f};exact={lat['exact']}"),
+        f"bench_serve_json,0.000,path={out}",
+    ]
+    return rows

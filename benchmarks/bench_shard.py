@@ -48,6 +48,7 @@ import jax
 
 from benchmarks.common import (balanced_keygen, run_pipelined_workload,
                                run_workload, run_sharded_workload, fmt_row)
+from repro.obs.meta import bench_meta
 
 MODES = ("soft", "linkfree", "logfree")
 BACKENDS = ("probe", "scan", "bucket")
@@ -75,6 +76,7 @@ def run(quick: bool = False, out: str = OUT, backend: str = None):
     modes = ("soft",) if quick else MODES
     backends = tuple(backend.split(",")) if backend else BACKENDS
     payload = {
+        "meta": bench_meta(),
         "config": {"capacity": cap, "key_range": kr, "batch": batch,
                    "read_pct": read_pct, "rounds": rounds, "quick": quick,
                    "backends": list(backends), "shards": list(SHARDS),

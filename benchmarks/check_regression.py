@@ -27,7 +27,20 @@ floors in ``benchmarks/baseline_floor.json``:
     ``queue_soft_ops_per_sec`` after tolerance, soft ``psync_per_op``
     above the EXACT ``queue_psync_per_op_ceiling`` (the SOFT bound is 1
     per successful op -- any excess is a correctness bug surfacing as
-    perf), or any nonzero failed-op / recovery psyncs.
+    perf), or any nonzero failed-op / recovery psyncs;
+  * open-loop serving (``BENCH_serve.json``, required whenever the floor
+    file carries ``serve_*`` keys): latency p99 above
+    ``serve_p99_ms_ceiling`` (a generous SLO guard against queueing
+    collapse, tolerant of CI machine noise by construction), any
+    structure's psync-per-op above the EXACT
+    ``serve_psync_per_op_ceiling`` (SOFT: <= 1 per op for the registry,
+    exactly 1 for the spine queues), any rejected/overflowed/dropped
+    request, or non-exact percentiles (the sample reservoir degraded).
+
+Every payload may carry a ``meta`` block (git commit, jax version,
+schema version -- written by ``repro.obs.meta.bench_meta``); a missing
+block is TOLERATED (older artifacts stay checkable) but reported, so a
+regression can always be traced to its commit.
 
 The floor value is a conservative committed baseline, not the best
 measurement: CI machines vary, so the tolerance absorbs machine noise while
@@ -152,16 +165,66 @@ def check_queue(bench: dict, floor: dict) -> list:
     return failures
 
 
+def check_serve(bench: dict, floor: dict) -> list:
+    """Guard ``BENCH_serve.json``: a p99 SLO ceiling plus the exact
+    per-structure psync accounting the spine promises."""
+    failures = []
+    lat = bench.get("latency")
+    if not lat or lat.get("p99_ms") is None:
+        return ["latency section missing from the serve benchmark payload"]
+    if "serve_p99_ms_ceiling" in floor:
+        ceil = floor["serve_p99_ms_ceiling"]
+        if lat["p99_ms"] > ceil:
+            failures.append(
+                f"serve p99 {lat['p99_ms']:.2f} ms > ceiling {ceil} ms "
+                "(open-loop tail collapsed)")
+    if not lat.get("exact", False):
+        failures.append(
+            "serve percentiles are subsampled estimates (exact=false): "
+            "raise the histogram max_samples or shorten the run")
+    if "serve_psync_per_op_ceiling" in floor:
+        ceil = floor["serve_psync_per_op_ceiling"]
+        for name, v in bench.get("psync_per_op", {}).items():
+            if v is None:
+                failures.append(f"serve psync_per_op[{name}] missing")
+            elif v > ceil + 1e-9:              # exact bound, no slack
+                failures.append(
+                    f"serve psync_per_op[{name}] {v:.4f} > exact ceiling "
+                    f"{ceil} (SOFT bound violated)")
+    c = bench.get("counters", {})
+    for key in ("ack_rejected", "commit_short", "router_dropped"):
+        if c.get(key, 0) != 0:
+            failures.append(f"serve {key} = {c[key]} != 0 (requests lost)")
+    for key in ("registry_overflowed", "queue_overflowed"):
+        if c.get(key, False):
+            failures.append(f"serve {key} latched (capacity exhausted)")
+    return failures
+
+
+def report_meta(path: str, bench: dict) -> None:
+    """Tolerate-but-report provenance: a missing meta block never fails
+    the guard, but the log always says where each artifact came from."""
+    meta = bench.get("meta")
+    if meta is None:
+        print(f"note: {path} has no meta block (pre-provenance payload)")
+    else:
+        print(f"{path}: commit={meta.get('git_commit', '?')[:12]} "
+              f"jax={meta.get('jax_version', '?')} "
+              f"schema=v{meta.get('schema_version', '?')}")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="BENCH_shard.json")
     ap.add_argument("--bench-queue", default="BENCH_queue.json")
+    ap.add_argument("--bench-serve", default="BENCH_serve.json")
     ap.add_argument("--floor", default="benchmarks/baseline_floor.json")
     args = ap.parse_args()
     with open(args.bench) as f:
         bench = json.load(f)
     with open(args.floor) as f:
         floor = json.load(f)
+    report_meta(args.bench, bench)
     failures = check(bench, floor)
     if any(k.startswith("queue_") for k in floor):
         try:
@@ -173,7 +236,20 @@ def main() -> int:
                 f"floor file has queue_* keys but {args.bench_queue} is "
                 "missing (was bench_queue run?)")
         if qbench is not None:
+            report_meta(args.bench_queue, qbench)
             failures += check_queue(qbench, floor)
+    if any(k.startswith("serve_") for k in floor):
+        try:
+            with open(args.bench_serve) as f:
+                sbench = json.load(f)
+        except OSError:
+            sbench = None
+            failures.append(
+                f"floor file has serve_* keys but {args.bench_serve} is "
+                "missing (was bench_serve run?)")
+        if sbench is not None:
+            report_meta(args.bench_serve, sbench)
+            failures += check_serve(sbench, floor)
     for msg in failures:
         print(f"PERF REGRESSION: {msg}", file=sys.stderr)
     if not failures:

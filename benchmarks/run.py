@@ -35,12 +35,14 @@ def main() -> None:
 
     from benchmarks import (scalability, key_range, read_pct,
                             psync_counts, recovery, checkpoint_bench,
-                            bench_hash, bench_shard, bench_queue)
+                            bench_hash, bench_shard, bench_queue,
+                            bench_serve)
     suites = {
         "psync_counts": psync_counts,    # paper's analytical bound first
         "bench_hash": bench_hash,        # canonical point -> BENCH_hash.json
         "bench_shard": bench_shard,      # sharded runtime -> BENCH_shard.json
         "bench_queue": bench_queue,      # durable queue -> BENCH_queue.json
+        "bench_serve": bench_serve,      # open-loop tails -> BENCH_serve.json
         "scalability": scalability,      # Fig 1
         "key_range": key_range,          # Fig 2
         "read_pct": read_pct,            # Fig 3

@@ -37,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import sys
+import time
 import warnings
 from typing import Dict, Optional, Protocol, Tuple
 
@@ -493,7 +494,89 @@ def crash_and_recover(state: SetState, u: jax.Array, *, spec: SetSpec
 # ---------------------------------------------------------------------------
 
 
-class DurableMap:
+class MetricsMixin:
+    """Observability plumbing shared by every durable-structure facade
+    (DESIGN.md §10): ``DurableMap``, ``ShardedDurableMap``,
+    ``DurableQueue``.
+
+    Everything here is host-side and opt-in: with no registry attached a
+    facade pays nothing, and even with one attached the device counters
+    are only read inside ``_metrics_collect`` -- i.e. at registry
+    SNAPSHOT time, an explicit force boundary -- never per dispatched
+    batch.  The host class provides ``psyncs`` / ``ops`` / ``__len__`` /
+    ``overflowed`` / ``last_recovery_hist`` and calls
+    ``_metrics_pre_recovery`` (before applying a crash: the device
+    counters are about to reset) and ``_metrics_post_recovery`` (after
+    the rebuild) from its ``crash_and_recover``.
+    """
+    _m = None                       # MetricsRegistry (opt-in)
+    _m_name = "structure"
+    _m_bridge = None
+    last_recovery_seconds = None
+
+    def attach_metrics(self, registry, name: Optional[str] = None):
+        """Register this structure's telemetry with a
+        :class:`repro.obs.MetricsRegistry` under ``name``.  Returns
+        self.  Device counters cross to the host only when the registry
+        snapshots."""
+        from repro.obs.bridge import DeviceCounterBridge
+        if name is not None:
+            self._m_name = name
+        self._m = registry
+        self._m_bridge = DeviceCounterBridge(registry, self._m_name)
+        registry.register_collector(self._m_name, self._metrics_collect)
+        return self
+
+    def _metrics_extra(self) -> dict:
+        """Subclass hook: structure-specific snapshot fields."""
+        return {}
+
+    def _metrics_collect(self) -> dict:
+        b = self._m_bridge
+        psyncs, ops = self.psyncs, self.ops
+        b.fold(psync=psyncs, op=ops)
+        out = {
+            "psyncs": psyncs,                  # device counters (reset at
+            "ops": ops,                        # recovery)
+            "psync_total": b.total("psync"),   # monotone lifetime totals
+            "ops_total": b.total("op"),
+            "size": len(self),
+            "overflowed": bool(self.overflowed),
+            "recoveries":
+                self._m.counter(f"{self._m_name}.recoveries").value,
+            "recovery_psyncs":
+                self._m.counter(f"{self._m_name}.recovery_psyncs").value,
+        }
+        if self.last_recovery_hist is not None:
+            out["last_recovery_hist"] = np.asarray(
+                self.last_recovery_hist).tolist()
+            out["last_recovery_seconds"] = self.last_recovery_seconds
+        out.update(self._metrics_extra())
+        return out
+
+    def _metrics_pre_recovery(self):
+        """Fold the pre-crash counter deltas (they are about to reset)."""
+        if self._m is not None:
+            self._m_bridge.fold(psync=self.psyncs, op=self.ops)
+
+    def _metrics_post_recovery(self, scanned_slots: int):
+        """Record the recovery: duration, scanned-slot gauge, and the
+        recovery-psync counter (exactly 0 by construction -- payloads are
+        already durable; the counter existing makes that checkable)."""
+        if self._m is None:
+            return
+        m, name = self._m, self._m_name
+        m.counter(f"{name}.recoveries").inc()
+        m.counter(f"{name}.recovery_psyncs").inc(self.psyncs)
+        m.gauge(f"{name}.last_recovery_scanned_slots").set(scanned_slots)
+        m.gauge(f"{name}.last_recovery_seconds").set(
+            self.last_recovery_seconds)
+        m.histogram(f"span.{name}.recovery").record(
+            self.last_recovery_seconds)
+        self._m_bridge.mark_reset(psync=self.psyncs, op=self.ops)
+
+
+class DurableMap(MetricsMixin):
     """Object API over the engine (single-controller usage).
 
     >>> m = DurableMap(SetSpec(capacity=1024, mode="soft", backend="bucket"))
@@ -502,7 +585,8 @@ class DurableMap:
     >>> m.crash_and_recover()       # volatile index lost + rebuilt
     """
 
-    def __init__(self, spec: Optional[SetSpec] = None, **spec_kwargs):
+    def __init__(self, spec: Optional[SetSpec] = None, metrics=None,
+                 metrics_name: str = "map", **spec_kwargs):
         if spec is None:
             spec = SetSpec(**spec_kwargs)
         elif spec_kwargs:
@@ -511,7 +595,11 @@ class DurableMap:
         self.spec = spec
         self.state = make_state(spec)
         self.last_recovery_hist = None   # i32[5] stage histogram, post-recover
+        self.last_recovery_seconds = None
         self._overflow_warned = False
+        self._m_name = metrics_name
+        if metrics is not None:
+            self.attach_metrics(metrics, name=metrics_name)
 
     @staticmethod
     def _i32(x) -> jax.Array:
@@ -569,9 +657,14 @@ class DurableMap:
     def crash_and_recover(self, u=None):
         if u is None:
             u = jnp.zeros_like(self.state.cur, jnp.float32)
+        self._metrics_pre_recovery()     # device counters are about to reset
+        t0 = time.perf_counter()
         self.state, hist = crash_and_recover(self.state, u, spec=self.spec)
         self.last_recovery_hist = np.asarray(hist)
+        jax.block_until_ready(self.state.keys)    # honest recovery timing
+        self.last_recovery_seconds = time.perf_counter() - t0
         self._overflow_warned = False    # fresh latch after the rebuild
+        self._metrics_post_recovery(scanned_slots=self.spec.capacity)
         self._check_overflow()
         return self
 

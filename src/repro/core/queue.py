@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -62,7 +63,7 @@ import numpy as np
 
 from repro.core import durable_set as DS
 from repro.core.durable_set import MODES
-from repro.core.engine import warn_structure
+from repro.core.engine import MetricsMixin, warn_structure
 from repro.core.nvm import (FREE, VALID, DELETED, crash_persisted_stage)
 from repro.kernels.recovery_scan import ops as rs_ops
 
@@ -321,16 +322,22 @@ def crash_and_recover(state: QueueState, u: jax.Array, *, spec: QueueSpec
 # ---------------------------------------------------------------------------
 
 
-class DurableQueue:
+class DurableQueue(MetricsMixin):
     """Object API over the durable ring queue (single-controller usage).
 
     >>> q = DurableQueue(QueueSpec(capacity=1024))
     >>> q.enqueue([7, 8, 9])          # -> [True, True, True], 3 psyncs
     >>> q.crash_and_recover()         # head/tail lost + rebuilt
     >>> q.dequeue(2)                  # -> ([7, 8], [True, True])
+
+    Pass ``metrics=MetricsRegistry(...)`` to expose psync/op totals,
+    size, the overflow latch, and recovery spans through the registry's
+    ``snapshot()`` (DESIGN.md §10); ``metrics_name`` namespaces the
+    entries (default "queue").
     """
 
-    def __init__(self, spec: Optional[QueueSpec] = None, **spec_kwargs):
+    def __init__(self, spec: Optional[QueueSpec] = None, metrics=None,
+                 metrics_name: str = "queue", **spec_kwargs):
         if spec is None:
             spec = QueueSpec(**spec_kwargs)
         elif spec_kwargs:
@@ -338,8 +345,12 @@ class DurableQueue:
         self.spec = spec
         self.state = make_state(spec)
         self.last_recovery_hist = None    # i32[5] stage histogram
+        self.last_recovery_seconds = None
         self.last_tickets = None          # tickets of the last enqueue batch
         self._overflow_warned = False
+        self._m_name = metrics_name
+        if metrics is not None:
+            self.attach_metrics(metrics, name=metrics_name)
 
     @property
     def overflowed(self) -> bool:
@@ -380,10 +391,15 @@ class DurableQueue:
     def crash_and_recover(self, u=None):
         if u is None:
             u = jnp.zeros_like(self.state.cur, jnp.float32)
+        self._metrics_pre_recovery()      # counters are about to reset
+        t0 = time.perf_counter()
         self.state, hist = crash_and_recover(self.state, jnp.asarray(u),
                                              spec=self.spec)
         self.last_recovery_hist = np.asarray(hist)
+        jax.block_until_ready(self.state.vals)
+        self.last_recovery_seconds = time.perf_counter() - t0
         self._overflow_warned = False     # fresh latch after the rebuild
+        self._metrics_post_recovery(scanned_slots=self.spec.capacity)
         self._check_overflow()
         return self
 

@@ -203,6 +203,7 @@ class _ScratchPool:
         self._free = {}
         self.grid_allocs = 0
         self.acquires = 0
+        self.releases = 0
 
     def acquire(self, d: int, bd: int, b: int) -> _Scratch:
         key = (d, bd, b)
@@ -215,10 +216,12 @@ class _ScratchPool:
 
     def release(self, scratch) -> None:
         if scratch is not None:
+            self.releases += 1
             self._free.setdefault(scratch.key, []).append(scratch)
 
     def stats(self) -> dict:
         return {"grid_allocs": self.grid_allocs, "acquires": self.acquires,
+                "releases": self.releases,
                 "free": sum(len(v) for v in self._free.values())}
 
     def clear(self) -> None:

@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Optional, Tuple
 
 import jax
@@ -73,8 +74,8 @@ from repro.core import durable_set as DS
 from repro.core import engine as E
 from repro.core import router as RT
 from repro.core.durable_set import SetState
-from repro.core.engine import (OP_CONTAINS, OP_INSERT, OP_NOP, OP_REMOVE,
-                               SetSpec)
+from repro.core.engine import (MetricsMixin, OP_CONTAINS, OP_INSERT, OP_NOP,
+                               OP_REMOVE, SetSpec)
 from repro.core.nvm import hash32, np_hash32
 
 
@@ -500,7 +501,7 @@ class _LazyBatch:
         return f"_LazyBatch({self._kind}, forced={self._value!r})"
 
 
-class ShardedDurableMap:
+class ShardedDurableMap(MetricsMixin):
     """DurableMap façade over S independent shards (single-controller).
 
     >>> m = ShardedDurableMap(SetSpec(capacity=65536, backend="bucket"),
@@ -515,6 +516,7 @@ class ShardedDurableMap:
     """
 
     def __init__(self, spec=None, n_shards: Optional[int] = None,
+                 metrics=None, metrics_name: str = "sharded_map",
                  **spec_kwargs):
         if isinstance(spec, ShardSpec):
             if n_shards is not None:
@@ -548,6 +550,9 @@ class ShardedDurableMap:
         self._pending = []                    # dispatched, not yet forced
         self._overflow_warned = False
         self._dropped_warned = False
+        self._m_name = metrics_name
+        if metrics is not None:
+            self.attach_metrics(metrics, name=metrics_name)
 
     @property
     def spec(self) -> SetSpec:
@@ -653,6 +658,33 @@ class ShardedDurableMap:
         self._finish(None, 0)                 # deferred overflow check
         return self
 
+    def scratch_stats(self) -> dict:
+        """Routing scratch-pool counters (module-wide ``_ScratchPool``):
+        ``grid_allocs`` (real buffer allocations), ``acquires``,
+        ``releases`` (recycles -- including the scratch of a batch
+        ABANDONED by ``crash_and_recover``), ``free`` (sets parked in
+        the pool).  ``acquires - releases`` is the number of scratch
+        sets still referenced by staged/in-flight batches; after a
+        ``pipeline_flush`` or a crash it is exactly the pre-existing
+        in-flight count -- nothing leaks (tests/test_obs.py)."""
+        return RT.scratch_stats()
+
+    def _metrics_extra(self) -> dict:
+        route = None
+        if self.last_route is not None:
+            route = {"lane_budget": self.last_route.lane_budget,
+                     "groups": self.last_route.groups,
+                     "max_occ": self.last_route.max_occ}
+        return {
+            "n_shards": self.n_shards,
+            "router_dropped": self.router_dropped,
+            "pipeline_abandoned": self.pipeline_abandoned,
+            "pipeline_staged": int(self._staged is not None),
+            "pipeline_pending": len(self._pending),
+            "scratch": self.scratch_stats(),
+            "last_route": route,
+        }
+
     def _apply(self, ops, keys, values):
         if self.sspec.pipeline_depth > 1:
             return self._submit("apply", ops, keys, values)
@@ -695,18 +727,20 @@ class ShardedDurableMap:
         values = keys if values is None else np.asarray(values, np.int32)
         return self._apply(np.asarray(ops, np.int32), keys, values)
 
-    def precompile(self, batch: int):
+    def precompile(self, batch: int, partial=None):
         """Trace/compile the v2 stage-2 program for every lane budget the
         adaptive chooser can pick for ``batch``-lane batches (exact no-op
-        on the map's contents).  With ``pipeline_depth > 1`` this also
-        covers every smaller pow2 Bd bucket a padded wave can realize, so
-        the first pipelined batch never pays a trace stall mid-serve.
-        Returns the tuple of budgets compiled."""
+        on the map's contents).  ``partial`` (default: on iff
+        ``pipeline_depth > 1``) also covers every smaller pow2 Bd bucket
+        a padded batch can realize, so neither the first pipelined wave
+        nor an open-loop driver serving short padded batches ever pays a
+        trace stall mid-serve.  Returns the tuple of budgets compiled."""
         if self.sspec.router != "v2":
             return ()
         self._dispatch_staged()               # keep FIFO order intact
         self.state, budgets = RT.precompile(self.state, batch,
-                                            sspec=self.sspec)
+                                            sspec=self.sspec,
+                                            partial=partial)
         return budgets
 
     def crash_and_recover(self, u=None, seed: int = 0):
@@ -727,16 +761,25 @@ class ShardedDurableMap:
             RT.release_plan(h._plan)
             h._abandoned = True
             self.pipeline_abandoned += 1
+            if self._m is not None:
+                self._m.counter(
+                    f"{self._m_name}.pipeline_abandoned").inc()
         while self._pending:
             self._force_oldest()
+        self._metrics_pre_recovery()          # counters are about to reset
         if u is None:
             u = np.random.default_rng(seed).random(
                 self.state.cur.shape).astype(np.float32)
+        t0 = time.perf_counter()
         self.state, hist = crash_and_recover(self.state, jnp.asarray(u),
                                              sspec=self.sspec)
         self.last_recovery_hist_shards = np.asarray(hist)
         self.last_recovery_hist = self.last_recovery_hist_shards.sum(axis=0)
+        jax.block_until_ready(self.state.keys)    # honest recovery timing
+        self.last_recovery_seconds = time.perf_counter() - t0
         self._overflow_warned = False         # fresh latch after the rebuild
+        self._metrics_post_recovery(
+            scanned_slots=self.n_shards * self.spec.capacity)
         self._finish(None, 0)
         return self
 

@@ -1,0 +1,378 @@
+"""Open-loop serving benchmark: tail latency under an arrival RATE.
+
+The closed-loop drivers (``benchmarks/``) measure throughput by issuing
+the next batch the moment the previous one finishes -- they can never
+observe queueing delay, which is the quantity an SLO is written against.
+This driver is OPEN-LOOP: requests arrive on a Poisson process at a
+configured (or auto-calibrated) rate whether or not the spine has
+finished the previous batch, land in a host backlog, and are served in
+fixed power-of-two batches through the durable request/completion spine
+of :mod:`repro.launch.serve` (DESIGN.md §7):
+
+    durable ack enqueue -> volatile peek/serve (registry mixed batch)
+    -> response enqueue -> request dequeue COMMIT -> response delivery
+
+Per-request latency = (completion force time - arrival time), recorded
+in the :class:`repro.obs.Histogram` whose log2 buckets + exact
+p50/p99/p999 land in ``BENCH_serve.json`` -- the artifact
+``benchmarks/check_regression.py`` floors in CI (p99 ceiling +
+psync-per-op ceilings per structure).
+
+Workload shape (the paper's Section 6 mix under serving skew):
+reads/updates/deletes 50/25/25 over a Zipf-popular key space of millions
+of distinct keys.  Equal update/delete fractions keep the live set
+stationary (a key is present iff its LAST update was an insert =>
+P(present) -> 1/2 per touched key), so the 2^20-capacity registry never
+overflows even over multi-minute runs.
+
+  PYTHONPATH=src python -m repro.launch.bench_serve --duration 60
+  PYTHONPATH=src python -m repro.launch.bench_serve --quick   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DurableMap, DurableQueue, QueueSpec,
+                        ShardedDurableMap, SetSpec)
+from repro.core import queue as Q
+from repro.core.engine import OP_CONTAINS, OP_INSERT, OP_NOP, OP_REMOVE
+from repro.obs import JSONLSink, MetricsRegistry, bench_meta
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Open-loop run shape (all the knobs BENCH_serve.json records)."""
+    duration: float = 60.0        # seconds of offered traffic
+    rate: float = 0.0             # requests/sec; 0 = auto-calibrate
+    utilization: float = 0.6      # auto-rate = utilization * closed-loop
+    batch: int = 1024             # spine batch (power of two, padded)
+    capacity: int = 1 << 20       # registry slots TOTAL
+    key_range: int = 4_000_000    # distinct keys the popularity law covers
+    zipf_s: float = 1.1           # Zipf popularity exponent
+    read_pct: int = 50            # reads; updates/deletes split the rest
+    mode: str = "soft"
+    backend: str = "probe"
+    shards: int = 8
+    queue_capacity: int = 4096    # per spine queue (power of two)
+    seed: int = 0
+    jsonl: str = ""               # optional per-interval snapshot trail
+
+
+def _percentiles_ms(hist) -> dict:
+    snap = hist.snapshot()
+    out = {"count": snap["count"], "exact": snap["exact"]}
+    for k in ("mean", "p50", "p99", "p999", "max"):
+        v = snap[k]
+        out[f"{k}_ms"] = None if v is None else v * 1e3
+    return out
+
+
+class _ArrivalGen:
+    """Vectorized Poisson/Zipf arrival stream.
+
+    Draws interarrival gaps, keys, and op codes in chunks (one RNG call
+    per plane per chunk) so the host generator never becomes the
+    bottleneck it would be as a per-event Python loop.  ``take(now, n)``
+    returns up to ``n`` arrivals with arrival time <= ``now`` --
+    the open-loop contract: time advances whether or not the spine kept
+    up.
+    """
+    CHUNK = 1 << 14
+
+    def __init__(self, cfg: ServeConfig, rate: float):
+        self._rng = np.random.default_rng(cfg.seed)
+        self._cfg = cfg
+        self._rate = rate
+        self._t = np.empty((0,), np.float64)
+        self._k = np.empty((0,), np.int32)
+        self._o = np.empty((0,), np.int32)
+        self._clock = 0.0          # arrival time of the last drawn event
+
+    def _refill(self) -> None:
+        cfg, rng, n = self._cfg, self._rng, self.CHUNK
+        t = self._clock + np.cumsum(rng.exponential(1.0 / self._rate, n))
+        self._clock = float(t[-1])
+        keys = ((rng.zipf(cfg.zipf_s, n) - 1) % cfg.key_range).astype(
+            np.int32)
+        u = rng.random(n)
+        rd = cfg.read_pct / 100.0
+        ops = np.where(u < rd, OP_CONTAINS,
+                       np.where(u < rd + (1.0 - rd) / 2.0,
+                                OP_INSERT, OP_REMOVE)).astype(np.int32)
+        self._t = np.concatenate([self._t, t])
+        self._k = np.concatenate([self._k, keys])
+        self._o = np.concatenate([self._o, ops])
+
+    def next_arrival(self) -> float:
+        if self._t.size == 0:
+            self._refill()
+        return float(self._t[0])
+
+    def take(self, now: float, max_n: int):
+        """Arrivals due by ``now`` (at most ``max_n``): (t, keys, ops)."""
+        while self._t.size < max_n and self._clock <= now:
+            self._refill()
+        n = min(int(np.searchsorted(self._t, now, side="right")), max_n)
+        out = self._t[:n], self._k[:n], self._o[:n]
+        self._t, self._k, self._o = self._t[n:], self._k[n:], self._o[n:]
+        return out
+
+
+# Masked durable enqueue: the facade's jitted ``enqueue`` has no lane
+# mask, but a padded spine batch must not bill psyncs for OP_NOP lanes.
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
+def _enqueue_masked(state, vals, active, *, spec):
+    return Q.enqueue_impl(state, vals, spec=spec, active=active)
+
+
+def _build_spine(cfg: ServeConfig, registry_metrics: MetricsRegistry):
+    spec = SetSpec(capacity=cfg.capacity, mode=cfg.mode,
+                   backend=cfg.backend)
+    if cfg.shards > 1:
+        registry = ShardedDurableMap(spec, n_shards=cfg.shards,
+                                     metrics=registry_metrics,
+                                     metrics_name="registry")
+        # partial: short open-loop rounds realize smaller pow2 stage-1
+        # buckets (padding is not transported) -- trace them up front so
+        # no tail latency sample ever includes a compile stall
+        registry.precompile(cfg.batch, partial=True)
+    else:
+        registry = DurableMap(spec, metrics=registry_metrics,
+                              metrics_name="registry")
+    qspec = QueueSpec(capacity=cfg.queue_capacity, mode=cfg.mode)
+    req_q = DurableQueue(qspec, metrics=registry_metrics,
+                         metrics_name="req_queue")
+    resp_q = DurableQueue(qspec, metrics=registry_metrics,
+                          metrics_name="resp_queue")
+    return registry, req_q, resp_q
+
+
+def _spine_round(m: MetricsRegistry, registry, req_q, resp_q, spec_q,
+                 keys: np.ndarray, ops: np.ndarray) -> int:
+    """One padded spine batch (DESIGN.md §7 ordering).  ``ops`` may
+    contain OP_NOP padding; real lanes = the request ids this round
+    acknowledges, serves, and commits.  Returns the real-lane count
+    AFTER the full round is forced -- the completion instant."""
+    active = jnp.asarray(ops != OP_NOP)
+    jkeys = jnp.asarray(keys)
+    with m.span("ack"):
+        req_q.state, ok_in, _ = _enqueue_masked(
+            req_q.state, jkeys, active, spec=spec_q)
+    with m.span("dispatch"):
+        # volatile peek is implicit (the batch IS in hand); the mixed
+        # registry batch does route (host stage 1) + device dispatch
+        res = registry.apply(ops, keys, keys)
+    with m.span("commit"):
+        # completion durable BEFORE the request dequeue commit
+        resp_q.state, _, _ = _enqueue_masked(
+            resp_q.state, jkeys, active, spec=spec_q)
+        req_q.state, _, ok_c, _ = Q.dequeue(req_q.state, active,
+                                            spec=spec_q)
+        resp_q.state, _, ok_d, _ = Q.dequeue(resp_q.state, active,
+                                             spec=spec_q)   # delivery
+    with m.span("force"):
+        np.asarray(res)                       # force registry results
+        n_acked = int(np.asarray(ok_in).sum())
+        n_committed = int(np.asarray(ok_c).sum())
+        n_delivered = int(np.asarray(ok_d).sum())
+    n_real = int((ops != OP_NOP).sum())
+    if n_acked < n_real:
+        m.counter("spine.ack_rejected").inc(n_real - n_acked)
+    if n_committed < n_real or n_delivered < n_real:
+        m.counter("spine.commit_short").inc(n_real - min(n_committed,
+                                                         n_delivered))
+    return n_real
+
+
+def _calibrate_rate(cfg: ServeConfig, m, registry, req_q, resp_q,
+                    gen_rng) -> float:
+    """Closed-loop throughput probe (also the jit warm-up): a few
+    back-to-back full batches through the spine; auto rate =
+    ``utilization`` * measured ops/s."""
+    qspec = req_q.spec
+    keys = ((gen_rng.zipf(cfg.zipf_s, cfg.batch) - 1)
+            % cfg.key_range).astype(np.int32)
+    ops = np.full((cfg.batch,), OP_CONTAINS, np.int32)
+    _spine_round(m, registry, req_q, resp_q, qspec, keys, ops)  # compile
+    rounds, t0 = 3, time.perf_counter()
+    for _ in range(rounds):
+        _spine_round(m, registry, req_q, resp_q, qspec, keys, ops)
+    closed = rounds * cfg.batch / (time.perf_counter() - t0)
+    return cfg.utilization * closed
+
+
+def run_open_loop(cfg: ServeConfig) -> dict:
+    """Run the open-loop experiment; returns the BENCH_serve payload."""
+    sinks = [JSONLSink(cfg.jsonl)] if cfg.jsonl else []
+    m = MetricsRegistry(sinks=sinks)
+    registry, req_q, resp_q = _build_spine(cfg, m)
+    qspec = req_q.spec
+    latency = m.histogram("serve.latency")
+
+    rate = cfg.rate
+    if rate <= 0:
+        rate = _calibrate_rate(cfg, m, registry, req_q, resp_q,
+                               np.random.default_rng(cfg.seed + 1))
+    # calibration traffic must not leak into the measured run: clear the
+    # volatile view, zero the spine counters, and baseline the durable
+    # per-structure totals (folded by this snapshot) for the psync/op math
+    m.reset_volatile()
+    for name in ("spine.requests", "spine.ack_rejected",
+                 "spine.commit_short"):
+        m.counter(name).value = 0
+    latency = m.histogram("serve.latency")
+    base_coll = m.snapshot()["collected"]
+    base = {n: (c.get("psync_total", 0), c.get("ops_total", 0))
+            for n, c in base_coll.items()}
+
+    arrivals = _ArrivalGen(cfg, rate)
+    backlog_t = np.empty((0,), np.float64)
+    backlog_k = np.empty((0,), np.int32)
+    backlog_o = np.empty((0,), np.int32)
+    backlog_peak = 0
+    served = 0
+
+    t0 = time.perf_counter()
+    t_end = cfg.duration
+    while True:
+        now = time.perf_counter() - t0
+        if now >= t_end:
+            break
+        if backlog_t.size < cfg.batch:
+            at, ak, ao = arrivals.take(now, cfg.batch * 4)
+            if at.size:
+                backlog_t = np.concatenate([backlog_t, at])
+                backlog_k = np.concatenate([backlog_k, ak])
+                backlog_o = np.concatenate([backlog_o, ao])
+        backlog_peak = max(backlog_peak, backlog_t.size)
+        if backlog_t.size == 0:
+            # idle: sleep to the next arrival instead of spinning
+            wait = min(max(arrivals.next_arrival() - now, 0.0),
+                       t_end - now, 0.01)
+            if wait > 0:
+                time.sleep(wait)
+            continue
+        n = min(backlog_t.size, cfg.batch)
+        keys = np.zeros((cfg.batch,), np.int32)
+        ops = np.full((cfg.batch,), OP_NOP, np.int32)
+        keys[:n] = backlog_k[:n]
+        ops[:n] = backlog_o[:n]
+        t_arr = backlog_t[:n]
+        backlog_t, backlog_k, backlog_o = (backlog_t[n:], backlog_k[n:],
+                                           backlog_o[n:])
+        _spine_round(m, registry, req_q, resp_q, qspec, keys, ops)
+        done = time.perf_counter() - t0
+        latency.record_many(done - t_arr)
+        served += n
+        m.counter("spine.requests").inc(n)
+        m.gauge("spine.backlog").set(int(backlog_t.size))
+        if sinks and served % (64 * cfg.batch) == 0:
+            m.emit(label=f"t={done:.1f}s")
+
+    wall = time.perf_counter() - t0
+    snap = m.snapshot()
+    coll = snap["collected"]
+
+    def per_op(name: str) -> Optional[float]:
+        c = coll.get(name, {})
+        bp, bo = base.get(name, (0, 0))
+        ops_t = c.get("ops_total", 0) - bo
+        return (c.get("psync_total", 0) - bp) / ops_t if ops_t else None
+
+    payload = {
+        "meta": bench_meta(),
+        "config": dataclasses.asdict(cfg),
+        "offered_rate": rate,
+        "duration_sec": wall,
+        "requests_completed": served,
+        "ops_per_sec": served / wall if wall > 0 else 0.0,
+        "latency": _percentiles_ms(latency),
+        "psync_per_op": {"registry": per_op("registry"),
+                         "req_queue": per_op("req_queue"),
+                         "resp_queue": per_op("resp_queue")},
+        "spans_ms": {k.split(".", 1)[1]: _percentiles_ms(h)
+                     for k, h in m._hists.items()
+                     if k.startswith("span.")},
+        "counters": {
+            "backlog_peak": backlog_peak,
+            "backlog_end": int(backlog_t.size),
+            "ack_rejected": m.counter("spine.ack_rejected").value,
+            "commit_short": m.counter("spine.commit_short").value,
+            "router_dropped": coll.get("registry", {}).get(
+                "router_dropped", 0),
+            "pipeline_abandoned": coll.get("registry", {}).get(
+                "pipeline_abandoned", 0),
+            "registry_overflowed": coll["registry"]["overflowed"],
+            "queue_overflowed": (coll["req_queue"]["overflowed"]
+                                 or coll["resp_queue"]["overflowed"]),
+            "registry_size_end": coll["registry"]["size"],
+        },
+    }
+    for s in sinks:
+        s.write({"label": "final", **snap})
+        s.close()
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    dflt = ServeConfig()
+    ap.add_argument("--duration", type=float, default=dflt.duration)
+    ap.add_argument("--rate", type=float, default=dflt.rate,
+                    help="offered requests/sec (0 = auto-calibrate to "
+                         "--utilization of measured closed-loop)")
+    ap.add_argument("--utilization", type=float, default=dflt.utilization)
+    ap.add_argument("--batch", type=int, default=dflt.batch)
+    ap.add_argument("--capacity", type=int, default=dflt.capacity)
+    ap.add_argument("--key-range", type=int, default=dflt.key_range)
+    ap.add_argument("--zipf-s", type=float, default=dflt.zipf_s)
+    ap.add_argument("--read-pct", type=int, default=dflt.read_pct)
+    ap.add_argument("--mode", default=dflt.mode)
+    ap.add_argument("--backend", default=dflt.backend,
+                    choices=("probe", "scan", "bucket"))
+    ap.add_argument("--shards", type=int, default=dflt.shards)
+    ap.add_argument("--queue-capacity", type=int,
+                    default=dflt.queue_capacity)
+    ap.add_argument("--seed", type=int, default=dflt.seed)
+    ap.add_argument("--jsonl", default="",
+                    help="also stream interval snapshots to this JSONL")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke shape: 20s at a small geometry")
+    args = ap.parse_args(argv)
+
+    kw = {f.name: getattr(args, f.name)
+          for f in dataclasses.fields(ServeConfig)}
+    if args.quick:
+        kw.update(duration=min(kw["duration"], 20.0), batch=256,
+                  capacity=1 << 16, key_range=200_000,
+                  queue_capacity=1024, shards=min(kw["shards"], 4))
+    cfg = ServeConfig(**kw)
+
+    payload = run_open_loop(cfg)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    lat = payload["latency"]
+    print(f"open-loop: {payload['requests_completed']} requests in "
+          f"{payload['duration_sec']:.1f}s "
+          f"({payload['ops_per_sec']:.0f} ops/s at offered rate "
+          f"{payload['offered_rate']:.0f}/s)")
+    print(f"latency ms: p50={lat['p50_ms']:.2f} p99={lat['p99_ms']:.2f} "
+          f"p999={lat['p999_ms']:.2f} (exact={lat['exact']})")
+    print(f"psync/op: {payload['psync_per_op']}")
+    print(f"counters: {payload['counters']}")
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -36,6 +36,8 @@ bill) is preserved verbatim under pipelining.
 from __future__ import annotations
 
 import argparse
+import contextlib
+import sys
 import time
 
 import jax
@@ -47,11 +49,23 @@ from repro.core import (DurableMap, DurableQueue, QueueSpec,
                         ShardedDurableMap, SetSpec)
 from repro.models import model as M
 from repro.models.sharding import CPU_CTX
+from repro.obs import MetricsRegistry
 from repro.train import steps as TS
 
 
 def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--open-loop" in argv:
+        # rate-driven tail-latency harness; every remaining flag is a
+        # bench_serve flag (--duration, --rate, --quick, --out, ...)
+        from repro.launch import bench_serve
+        argv.remove("--open-loop")
+        return bench_serve.main(argv)
     ap = argparse.ArgumentParser()
+    ap.add_argument("--open-loop", action="store_true",
+                    help="delegate to repro.launch.bench_serve: open-loop "
+                         "Poisson arrivals + BENCH_serve.json (all other "
+                         "flags are bench_serve flags)")
     ap.add_argument("--arch", default="qwen3-32b-smoke")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -101,13 +115,15 @@ def main(argv=None):
     prefill_step = jax.jit(prefill_step)
     decode_step = jax.jit(decode_step)
 
+    m = MetricsRegistry()     # one snapshot() reaches every structure
     spec = SetSpec(capacity=1024, mode="soft", backend=args.backend)
     if args.shards > 1:       # same façade API, hash-partitioned runtime
         registry = ShardedDurableMap(spec, n_shards=args.shards,
                                      router=args.router,
                                      placement=args.placement,
                                      max_lane_budget=args.max_lane_budget,
-                                     pipeline_depth=args.pipeline)
+                                     pipeline_depth=args.pipeline,
+                                     metrics=m, metrics_name="registry")
         # pipeline_depth > 1 makes this a PARTIAL precompile too: every
         # pow2 sub-batch bucket a padded wave can realize is traced, so
         # the first pipelined wave never pays a trace stall mid-serve
@@ -116,14 +132,27 @@ def main(argv=None):
             print(f"registry router v2: pre-compiled lane budgets "
                   f"{budgets} ({args.placement} placement)")
     else:
-        registry = DurableMap(spec)
+        registry = DurableMap(spec, metrics=m, metrics_name="registry")
     b = args.requests
     req_ids = np.arange(1000, 1000 + b, dtype=np.int32)
 
     req_q = resp_q = None
     if args.queue:
         qspec = QueueSpec(capacity=args.queue_capacity, mode="soft")
-        req_q, resp_q = DurableQueue(qspec), DurableQueue(qspec)
+        req_q = DurableQueue(qspec, metrics=m, metrics_name="req_queue")
+        resp_q = DurableQueue(qspec, metrics=m, metrics_name="resp_queue")
+
+    @contextlib.contextmanager
+    def phase(name):
+        """Span-time a spine phase and bill the queue psyncs it paid to
+        ``phase.<name>.psyncs`` -- what the end-of-run summary and the
+        --crash drill report per phase."""
+        qp0 = (req_q.psyncs + resp_q.psyncs) if args.queue else 0
+        with m.span(name):
+            yield
+        if args.queue:
+            m.counter(f"phase.{name}.psyncs").inc(
+                req_q.psyncs + resp_q.psyncs - qp0)
 
     max_seq = args.prompt_len + args.gen
     rng = np.random.default_rng(0)
@@ -147,7 +176,8 @@ def main(argv=None):
     if args.pipeline == 1:
         if args.queue:
             # 1. durable admission: the ack psync makes it survivable
-            acked = np.asarray(req_q.enqueue(req_ids))
+            with phase("ack"):
+                acked = np.asarray(req_q.enqueue(req_ids))
             assert acked.all(), "admission queue full"
             print(f"spine: acknowledged {int(acked.sum())} requests "
                   f"durably (req-queue psyncs={req_q.psyncs})")
@@ -155,8 +185,9 @@ def main(argv=None):
             served_ids, ok = req_q.peek(b)
             assert ok.all()
             np.testing.assert_array_equal(served_ids, req_ids)
-        gen = generate(all_toks)
-        jax.block_until_ready(gen)
+        with phase("generate"):
+            gen = generate(all_toks)
+            jax.block_until_ready(gen)
         dt = time.time() - t0
         print(f"served {b} requests x {args.gen} tokens in {dt:.2f}s "
               f"({b * args.gen / dt:.1f} tok/s)")
@@ -165,11 +196,13 @@ def main(argv=None):
         # Spine order (--queue): response enqueue -> registry insert ->
         # request dequeue COMMIT -- the dequeue's psync happens only after
         # the completion is durable, so no acknowledged request is lost.
+        with phase("record"):
+            if args.queue:
+                resp_q.enqueue(req_ids)
+            registry.insert(req_ids, np.asarray(gen[:, -1]))
         if args.queue:
-            resp_q.enqueue(req_ids)
-        registry.insert(req_ids, np.asarray(gen[:, -1]))
-        if args.queue:
-            _, committed = req_q.dequeue(b)
+            with phase("commit"):
+                _, committed = req_q.dequeue(b)
             assert committed.all()
     else:
         # Depth-N pipelined waves (DESIGN.md §6): wave k generates on
@@ -182,7 +215,8 @@ def main(argv=None):
                                            min(b, 2 * args.pipeline))
                  if len(w)]
         if args.queue:
-            acked = np.asarray(req_q.enqueue(req_ids[waves[0]]))
+            with phase("ack"):
+                acked = np.asarray(req_q.enqueue(req_ids[waves[0]]))
             assert acked.all(), "admission queue full"
         for k, idx in enumerate(waves):
             ids = req_ids[idx]
@@ -193,33 +227,52 @@ def main(argv=None):
             gen_w = generate(all_toks[idx])             # async, on device
             if args.queue and k + 1 < len(waves):
                 # wave k+1's durable ack rides wave k's device bubble
-                acked = np.asarray(req_q.enqueue(req_ids[waves[k + 1]]))
+                with phase("ack"):
+                    acked = np.asarray(req_q.enqueue(req_ids[waves[k + 1]]))
                 assert acked.all(), "admission queue full"
             last = np.asarray(gen_w)[:, -1]             # force wave k
+            with phase("record"):
+                if args.queue:
+                    resp_q.enqueue(ids)
+                registry.insert(ids, last)              # staged, lazy
+                registry.pipeline_flush()   # durable BEFORE dequeue commit
             if args.queue:
-                resp_q.enqueue(ids)
-            registry.insert(ids, last)                  # staged, lazy
-            registry.pipeline_flush()   # durable BEFORE dequeue commit
-            if args.queue:
-                _, committed = req_q.dequeue(len(ids))
+                with phase("commit"):
+                    _, committed = req_q.dequeue(len(ids))
                 assert np.asarray(committed).all()
         dt = time.time() - t0
         print(f"served {b} requests x {args.gen} tokens in {len(waves)} "
               f"waves (depth-{args.pipeline} registry pipeline) in "
               f"{dt:.2f}s ({b * args.gen / dt:.1f} tok/s)")
+    # end-of-run summary: everything below reads the ONE metrics snapshot
+    # (DESIGN.md §10) -- the same numbers an operator's sink would see
+    snap = m.snapshot()
+    coll = snap["collected"]
+    reg = coll["registry"]
     if args.queue:
-        print(f"spine: {len(resp_q)} completions enqueued, request queue "
-              f"drained (len={len(req_q)}), total spine psyncs="
-              f"{req_q.psyncs + resp_q.psyncs}")
+        by_phase = {k.split(".")[1]: v for k, v in snap["counters"].items()
+                    if k.startswith("phase.") and k.endswith(".psyncs")}
+        print(f"spine: {coll['resp_queue']['size']} completions enqueued, "
+              f"request queue drained (len={coll['req_queue']['size']}), "
+              f"psyncs by phase {by_phase}, total spine psyncs="
+              f"{coll['req_queue']['psync_total'] + coll['resp_queue']['psync_total']}")
     shard_tag = f" x{args.shards} shards" if args.shards > 1 else ""
-    print(f"registry[{args.backend}{shard_tag}]: {len(registry)} completed, "
-          f"psyncs={registry.psyncs} (== #requests)")
-    if args.shards > 1 and registry.last_route is not None:
-        print(f"router: lane_budget={registry.last_route.lane_budget} "
-              f"groups={registry.last_route.groups} "
-              f"dropped={registry.router_dropped}")
+    print(f"registry[{args.backend}{shard_tag}]: {reg['size']} completed, "
+          f"psyncs={reg['psyncs']} (== #requests)")
+    if args.shards > 1 and reg.get("last_route"):
+        lr = reg["last_route"]
+        print(f"router: lane_budget={lr['lane_budget']} "
+              f"groups={lr['groups']} dropped={reg['router_dropped']}")
 
     if args.crash:
+        late_ids = None
+        if args.queue:
+            # acked-but-not-yet-served work at crash time: exactly the
+            # requests the spine's ordering promises to redeliver
+            late_ids = req_ids + b
+            with phase("ack"):
+                acked = np.asarray(req_q.enqueue(late_ids))
+            assert acked.all(), "admission queue full"
         registry.crash_and_recover()
         done = np.array(registry.contains(req_ids))
         assert done.all()
@@ -228,12 +281,35 @@ def main(argv=None):
             req_q.crash_and_recover()
             resp_q.crash_and_recover()
             # no acknowledged request lost: each is in the registry or
-            # still live in the recovered request queue (here: all done)
+            # still live in the recovered request queue
             vals, ok = resp_q.peek(b)
             assert ok.all() and set(vals.tolist()) == set(req_ids.tolist())
-            assert len(req_q) == 0, "committed dequeues must stay dequeued"
-            print(f"spine after crash+recovery: {len(resp_q)} completions "
-                  f"survive, request queue still drained")
+            redelivered = len(req_q)
+            assert redelivered == len(late_ids), "acked requests lost"
+            ids, ok = req_q.peek(redelivered)   # re-serve survivors
+            assert np.asarray(ok).all()
+            with phase("record"):
+                resp_q.enqueue(ids)
+                registry.insert(ids, ids)   # dedups already-completed ids
+                if args.shards > 1:
+                    registry.pipeline_flush()
+            with phase("commit"):
+                _, committed = req_q.dequeue(redelivered)
+            assert np.asarray(committed).all()
+            m.counter("spine.redelivered").inc(redelivered)
+            assert np.array(registry.contains(late_ids)).all()
+            snap = m.snapshot()
+            coll = snap["collected"]
+            print(f"spine after crash+recovery: "
+                  f"{snap['counters']['spine.redelivered']} acked requests "
+                  f"redelivered and committed, "
+                  f"{coll['resp_queue']['size']} completions survive, "
+                  f"request queue drained (len={coll['req_queue']['size']}); "
+                  f"recovery psyncs: "
+                  f"registry={coll['registry']['recovery_psyncs']} "
+                  f"req_queue={coll['req_queue']['recovery_psyncs']} "
+                  f"resp_queue={coll['resp_queue']['recovery_psyncs']} "
+                  f"(all zero by construction)")
     return 0
 
 

@@ -1,0 +1,28 @@
+"""Provenance block for every BENCH_*.json artifact.
+
+``check_regression.py`` tolerates a missing block (older artifacts) but
+reports it, so regressions can always be traced to a commit + jax
+version without making old baselines unreadable.  ``SCHEMA_VERSION``
+bumps whenever a BENCH emitter changes field meaning (not on additive
+fields).
+"""
+from __future__ import annotations
+
+import subprocess
+
+SCHEMA_VERSION = 1
+
+
+def git_commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def bench_meta() -> dict:
+    import jax
+    return {"git_commit": git_commit(), "jax_version": jax.__version__,
+            "schema_version": SCHEMA_VERSION}
