@@ -1,0 +1,207 @@
+"""Hybrid-recovery benchmark: restart cost bounded by the DELTA, not the
+pool -> ``BENCH_recovery.json``.
+
+Per (capacity, delta) point: fill the map synthetically (construct the
+durable planes directly and canonicalize them with ONE ``recover``
+dispatch -- filling 2^20 slots through op batches takes minutes, one
+recovery dispatch takes under a second and produces the identical
+state), snapshot through the real :class:`~repro.store.snapshot.
+Snapshotter` (atomic dirs layout on disk), apply ``delta`` REAL mixed
+insert/remove ops on top, crash, then time
+
+  full      ``crash_and_recover`` -- the O(capacity) pool scan + rebuild
+  hybrid    ``Snapshotter.recover`` -- load the latest committed snapshot
+            from disk + classify/patch only the ``stamp > W`` slots
+
+best-of-``repeats`` warm (state restored from host copies between runs;
+compile excluded).  Each point also asserts the two recovered states are
+bit-identical field-by-field under the same crash adversary and that
+recovery issued EXACTLY zero psyncs -- those flags ride in the JSON and
+``benchmarks.check_regression`` enforces them, plus the headline
+``hybrid_vs_full`` speedup floor at the largest capacity.  ``--quick``
+keeps the 2^20 headline point (the fill is one dispatch, so CI can
+afford it) and drops the sweep's midpoints.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Result, fmt_row
+from repro.core import engine as E
+from repro.core import nvm
+from repro.core.engine import DurableMap, SetSpec
+from repro.obs.meta import bench_meta
+from repro.obs.metrics import MetricsRegistry
+
+OUT = "BENCH_recovery.json"
+
+FILL_FACTOR = 0.45        # live slots / capacity at snapshot time
+READ_BACK = 3             # timed repeats per recovery flavor (best-of)
+
+
+def _synthetic_fill(spec: SetSpec, n_live: int, seed: int) -> DurableMap:
+    """A filled map WITHOUT op loops: scatter ``n_live`` unique keys into
+    random slots of fresh durable planes (stage VALID, stamp epoch 1 --
+    exactly what committed inserts leave behind) and canonicalize with
+    one ``recover`` dispatch.  Bit-for-bit the state a full rebuild of
+    that pool produces, at one-dispatch cost."""
+    rng = np.random.default_rng(seed)
+    n = spec.capacity
+    keys = np.zeros((n,), np.int32)
+    values = np.zeros((n,), np.int32)
+    persisted = np.full((n,), nvm.FREE, np.int32)
+    stamp = np.zeros((n,), np.int32)
+    slots = rng.permutation(n)[:n_live]
+    keys[slots] = rng.permutation(np.arange(1, n_live + 1)).astype(np.int32)
+    values[slots] = keys[slots] * 3
+    persisted[slots] = nvm.VALID
+    stamp[slots] = 1
+    m = DurableMap(spec)
+    state, hist = E.recover(jnp.asarray(persisted), jnp.asarray(keys),
+                            jnp.asarray(values), jnp.asarray(stamp),
+                            spec=spec)
+    jax.block_until_ready(state.keys)
+    m.state = state
+    m.last_recovery_hist = np.asarray(hist)
+    assert len(m) == n_live and not m.overflowed, \
+        f"synthetic fill broke: size={len(m)} overflow={m.overflowed}"
+    return m
+
+
+def _host_copy(state):
+    return jax.tree.map(np.asarray, state)
+
+
+def _point(capacity: int, delta_ops: int, backend: str = "bucket",
+           seed: int = 0) -> dict:
+    from repro.store.snapshot import Snapshotter
+
+    rng = np.random.default_rng(seed + 7)
+    spec = SetSpec(capacity=capacity, backend=backend)
+    n_live = int(capacity * FILL_FACTOR)
+    m = _synthetic_fill(spec, n_live, seed)
+    m.attach_metrics(MetricsRegistry(), name="map")
+
+    snapdir = tempfile.mkdtemp(prefix="bench_recovery_")
+    sn = Snapshotter(m, snapdir)
+    try:
+        sn.snapshot()
+        sn.wait()
+
+        # the delta: REAL mixed ops on top of the snapshot -- half fresh
+        # inserts, half removes of live keys, batched like serving traffic
+        n_ins = delta_ops // 2
+        ins = np.arange(n_live + 1, n_live + 1 + n_ins).astype(np.int32)
+        rem = rng.permutation(np.arange(1, n_live + 1))[
+            :delta_ops - n_ins].astype(np.int32)
+        for lo in range(0, n_ins, 4096):
+            m.insert(ins[lo:lo + 4096])
+        for lo in range(0, rem.size, 4096):
+            m.remove(rem[lo:lo + 4096])
+        assert not m.overflowed
+        pre = _host_copy(m.state)
+        u = jnp.asarray(rng.random(capacity).astype(np.float32))
+
+        def restore():
+            m.state = jax.tree.map(jnp.asarray, pre)
+
+        # bit-identity first (also the compile warm-up for both paths)
+        m.crash_and_recover(u)
+        full_state = _host_copy(m.state)
+        full_hist = m.last_recovery_hist.copy()
+        restore()
+        sn.recover(u)
+        bit_identical = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for f, a, b in zip(m.state._fields, m.state, full_state)
+            if f not in ("n_psync", "n_ops"))
+        hist_match = np.array_equal(m.last_recovery_hist, full_hist)
+        recovery_psyncs = m.psyncs
+        g = (m._m.snapshot()["gauges"] if m._m is not None else {})
+
+        full_s, hybrid_s, hybrid_compute_s = [], [], []
+        for _ in range(READ_BACK):
+            restore()
+            t0 = time.perf_counter()
+            m.crash_and_recover(u)
+            full_s.append(time.perf_counter() - t0)
+        for _ in range(READ_BACK):
+            restore()
+            t0 = time.perf_counter()
+            sn.recover(u)              # disk load + delta classification
+            hybrid_s.append(time.perf_counter() - t0)
+            hybrid_compute_s.append(m.last_recovery_seconds)
+    finally:
+        sn.close()
+        shutil.rmtree(snapdir, ignore_errors=True)
+
+    full_ms = min(full_s) * 1e3
+    hybrid_ms = min(hybrid_s) * 1e3
+    return {
+        "capacity": capacity,
+        "backend": backend,
+        "live_slots": n_live,
+        "delta_ops": delta_ops,
+        "full_ms": full_ms,
+        "hybrid_ms": hybrid_ms,                  # includes the disk load
+        "hybrid_compute_ms": min(hybrid_compute_s) * 1e3,
+        "hybrid_vs_full": full_ms / hybrid_ms if hybrid_ms else None,
+        "bit_identical": bool(bit_identical and hist_match),
+        "recovery_psyncs": recovery_psyncs,
+        "from_delta_slots": g.get("map.last_recovery_from_delta_slots"),
+        "from_snapshot_slots": g.get(
+            "map.last_recovery_from_snapshot_slots"),
+    }
+
+
+def run(quick: bool = False, out: str = OUT):
+    # cadence sweep at the headline capacity: delta size is what a
+    # snapshot-every-K-batches policy leaves to re-scan
+    if quick:
+        points = [(1 << 16, 1024), (1 << 20, 4096)]
+    else:
+        points = [(1 << 16, 1024), (1 << 18, 4096),
+                  (1 << 20, 1024), (1 << 20, 4096), (1 << 20, 16384)]
+    rows, results = [], {}
+    for capacity, delta_ops in points:
+        r = _point(capacity, delta_ops)
+        results[f"n{capacity}_d{delta_ops}"] = r
+        res = Result(ops_per_sec=capacity / (r["hybrid_ms"] * 1e-3),
+                     psync_per_op=0.0, psync_per_update=0.0, rounds=1)
+        rows.append(fmt_row(
+            f"recovery_hybrid_n{capacity}_d{delta_ops}", res,
+            {"full_ms": f"{r['full_ms']:.1f}",
+             "hybrid_ms": f"{r['hybrid_ms']:.1f}",
+             "speedup": f"{r['hybrid_vs_full']:.2f}",
+             "bit_identical": r["bit_identical"]}))
+    headline_cap = max(c for c, _ in points)
+    headline = min((r for r in results.values()
+                    if r["capacity"] == headline_cap),
+                   key=lambda r: r["delta_ops"])
+    payload = {
+        "meta": bench_meta(),
+        "fill_factor": FILL_FACTOR,
+        "results": results,
+        "headline": {
+            "capacity": headline_cap,
+            "delta_ops": headline["delta_ops"],
+            "full_ms": headline["full_ms"],
+            "hybrid_ms": headline["hybrid_ms"],
+            "hybrid_vs_full": headline["hybrid_vs_full"],
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    rows.append(f"bench_recovery_json,0.000,path={out}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

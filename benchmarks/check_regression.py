@@ -35,7 +35,12 @@ floors in ``benchmarks/baseline_floor.json``:
     structure's psync-per-op above the EXACT
     ``serve_psync_per_op_ceiling`` (SOFT: <= 1 per op for the registry,
     exactly 1 for the spine queues), any rejected/overflowed/dropped
-    request, or non-exact percentiles (the sample reservoir degraded).
+    request, or non-exact percentiles (the sample reservoir degraded);
+  * hybrid recovery (``BENCH_recovery.json``, required whenever the floor
+    file carries ``recovery_*`` keys): the snapshot+delta restart below
+    ``recovery_min_hybrid_vs_full`` times the full-pool scan at the
+    headline capacity, any point recovering non-bit-identically, or any
+    nonzero recovery psyncs (both EXACT correctness bounds).
 
 Every payload may carry a ``meta`` block (git commit, jax version,
 schema version -- written by ``repro.obs.meta.bench_meta``); a missing
@@ -201,6 +206,40 @@ def check_serve(bench: dict, floor: dict) -> list:
     return failures
 
 
+def check_recovery(bench: dict, floor: dict) -> list:
+    """Guard ``BENCH_recovery.json``: the snapshot+delta hybrid must beat
+    the full-pool scan by the committed factor at the headline capacity,
+    recover bit-identically at EVERY point, and issue exactly zero
+    recovery psyncs -- the last two are correctness bounds, not perf."""
+    failures = []
+    results = bench.get("results", {})
+    if not results:
+        return ["results missing from the recovery benchmark payload"]
+    for name, r in results.items():
+        if not r.get("bit_identical", False):
+            failures.append(
+                f"recovery[{name}] hybrid state != full-scan state "
+                "(bit-identity broken: conformance bug, not noise)")
+        if r.get("recovery_psyncs", 0) != 0:
+            failures.append(
+                f"recovery[{name}] psyncs = {r['recovery_psyncs']} != 0 "
+                "(recovery must rebuild from persisted stages for free)")
+    if "recovery_min_hybrid_vs_full" in floor:
+        head = bench.get("headline")
+        if not head or head.get("hybrid_vs_full") is None:
+            failures.append(
+                "headline section missing from the recovery benchmark "
+                "payload, so the recovery_min_hybrid_vs_full floor was "
+                "never evaluated")
+        elif head["hybrid_vs_full"] < floor["recovery_min_hybrid_vs_full"]:
+            failures.append(
+                f"recovery hybrid_vs_full {head['hybrid_vs_full']:.2f}x at "
+                f"capacity {head.get('capacity')} < required "
+                f"{floor['recovery_min_hybrid_vs_full']:.2f}x (restart "
+                "cost no longer bounded by the delta)")
+    return failures
+
+
 def report_meta(path: str, bench: dict) -> None:
     """Tolerate-but-report provenance: a missing meta block never fails
     the guard, but the log always says where each artifact came from."""
@@ -218,6 +257,7 @@ def main() -> int:
     ap.add_argument("--bench", default="BENCH_shard.json")
     ap.add_argument("--bench-queue", default="BENCH_queue.json")
     ap.add_argument("--bench-serve", default="BENCH_serve.json")
+    ap.add_argument("--bench-recovery", default="BENCH_recovery.json")
     ap.add_argument("--floor", default="benchmarks/baseline_floor.json")
     args = ap.parse_args()
     with open(args.bench) as f:
@@ -250,6 +290,18 @@ def main() -> int:
         if sbench is not None:
             report_meta(args.bench_serve, sbench)
             failures += check_serve(sbench, floor)
+    if any(k.startswith("recovery_") for k in floor):
+        try:
+            with open(args.bench_recovery) as f:
+                rbench = json.load(f)
+        except OSError:
+            rbench = None
+            failures.append(
+                f"floor file has recovery_* keys but {args.bench_recovery} "
+                "is missing (was bench_recovery run?)")
+        if rbench is not None:
+            report_meta(args.bench_recovery, rbench)
+            failures += check_recovery(rbench, floor)
     for msg in failures:
         print(f"PERF REGRESSION: {msg}", file=sys.stderr)
     if not failures:

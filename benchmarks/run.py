@@ -2,11 +2,13 @@
 Prints ``name,us_per_call,derived`` CSV.  --quick trims sizes for CI;
 --backend swaps the hash-experiment index backend (probe | scan | bucket)
 -- "bucket" routes lookups through the Pallas hash_probe kernel.  The
-``bench_hash`` / ``bench_shard`` / ``bench_queue`` suites additionally
-write ``BENCH_hash.json`` / ``BENCH_shard.json`` / ``BENCH_queue.json``
-(ops/sec and psync/op at the canonical configuration; shard compares flat
-vs S in {1, 8} shards, queue tracks the exact SOFT psync-per-op bound)
-for cross-PR perf tracking; CI uploads all three as artifacts."""
+``bench_hash`` / ``bench_shard`` / ``bench_queue`` / ``bench_recovery``
+suites additionally write ``BENCH_hash.json`` / ``BENCH_shard.json`` /
+``BENCH_queue.json`` / ``BENCH_recovery.json`` (ops/sec and psync/op at
+the canonical configuration; shard compares flat vs S in {1, 8} shards,
+queue tracks the exact SOFT psync-per-op bound, recovery tracks the
+snapshot+delta hybrid vs full-scan restart cost) for cross-PR perf
+tracking; CI uploads them as artifacts."""
 import argparse
 import inspect
 import sys
@@ -36,13 +38,14 @@ def main() -> None:
     from benchmarks import (scalability, key_range, read_pct,
                             psync_counts, recovery, checkpoint_bench,
                             bench_hash, bench_shard, bench_queue,
-                            bench_serve)
+                            bench_serve, bench_recovery)
     suites = {
         "psync_counts": psync_counts,    # paper's analytical bound first
         "bench_hash": bench_hash,        # canonical point -> BENCH_hash.json
         "bench_shard": bench_shard,      # sharded runtime -> BENCH_shard.json
         "bench_queue": bench_queue,      # durable queue -> BENCH_queue.json
         "bench_serve": bench_serve,      # open-loop tails -> BENCH_serve.json
+        "bench_recovery": bench_recovery,  # hybrid -> BENCH_recovery.json
         "scalability": scalability,      # Fig 1
         "key_range": key_range,          # Fig 2
         "read_pct": read_pct,            # Fig 3

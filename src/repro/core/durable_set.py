@@ -83,6 +83,10 @@ class SetState(NamedTuple):
     values: jax.Array    # i32[N]
     cur: jax.Array       # i32[N] volatile lifecycle stage
     flushed: jax.Array   # i32[N] stage covered by the last explicit psync
+    stamp: jax.Array     # i32[N] epoch of the last durable mutation per slot
+    #                      (rides the commit scatter / helper flush -- same
+    #                      cache line as the stage word, ZERO extra psyncs;
+    #                      DESIGN.md §11 snapshot + delta-log recovery)
     # --- volatile index (never persisted -- the paper's core idea)
     table: jax.Array     # i32[T] node id, EMPTY or TOMB; linear probing
     bkeys: jax.Array     # i32[NB, W] bucket-table way keys (bucket backend)
@@ -95,6 +99,9 @@ class SetState(NamedTuple):
     n_ops: jax.Array     # completed operations
     size: jax.Array      # i32[] live member count
     overflow: jax.Array  # bool[] capacity / probe-length / stash failure latch
+    epoch: jax.Array     # i32[] VOLATILE current generation; bumped by the
+    #                      snapshotter at capture, re-derived from stamps (and
+    #                      the store's latest watermark) on recovery
 
 
 def make_state(capacity: int, table_factor: int = 4, n_buckets: int = 0,
@@ -110,6 +117,7 @@ def make_state(capacity: int, table_factor: int = 4, n_buckets: int = 0,
         values=jnp.zeros((n,), jnp.int32),
         cur=jnp.zeros((n,), jnp.int32),
         flushed=jnp.zeros((n,), jnp.int32),
+        stamp=jnp.zeros((n,), jnp.int32),
         table=jnp.full((t,), EMPTY, jnp.int32),
         bkeys=jnp.zeros((n_buckets, bucket_width), jnp.int32),
         bids=jnp.full((n_buckets, bucket_width), EMPTY, jnp.int32),
@@ -120,6 +128,7 @@ def make_state(capacity: int, table_factor: int = 4, n_buckets: int = 0,
         n_ops=jnp.zeros((), COUNTER_DTYPE),
         size=jnp.zeros((), jnp.int32),
         overflow=jnp.zeros((), jnp.bool_),
+        epoch=jnp.ones((), jnp.int32),   # stamp==0 means "never committed"
     )
 
 
@@ -549,6 +558,11 @@ def _insert_impl(state: SetState, keys: jax.Array, values: jax.Array, *,
     # flipV1 -> payload -> makeValid, then psync: cur=VALID, flushed=VALID.
     cur = state.cur.at[sidx].set(VALID, mode="drop")
     flushed = state.flushed.at[sidx].set(VALID, mode="drop")
+    # The epoch stamp rides the SAME commit scatter (same cache line as the
+    # stage word): the psync that makes the insert durable also makes the
+    # stamp durable -- the delta log costs the hot path nothing.
+    stamp = state.stamp.at[sidx].set(
+        jnp.broadcast_to(state.epoch, sidx.shape), mode="drop")
 
     fields = index_fields(state)
     iovf = jnp.bool_(False)
@@ -568,6 +582,10 @@ def _insert_impl(state: SetState, keys: jax.Array, values: jax.Array, *,
             & (state.cur[eidx] == VALID)
         flushed = flushed.at[jnp.where(helper, eidx, 0)].max(
             jnp.where(helper, VALID, 0))
+        # A helper flush changes what NVM holds for that slot, so it must
+        # advance the slot's stamp too (it rides the helper psync).
+        stamp = stamp.at[jnp.where(helper, eidx, 0)].max(
+            jnp.where(helper, state.epoch, 0))
         # Contention model: duplicate lanes re-flush the winner (flag race).
         new_psync = new_psync + jnp.sum(helper.astype(jnp.int32)) \
             + jnp.sum(plan.lose_dup.astype(jnp.int32))
@@ -575,13 +593,14 @@ def _insert_impl(state: SetState, keys: jax.Array, values: jax.Array, *,
         new_psync = new_psync + 2 * jnp.sum(plan.lose_dup.astype(jnp.int32))
 
     return SetState(
-        keys=keys_a, values=vals_a, cur=cur, flushed=flushed,
+        keys=keys_a, values=vals_a, cur=cur, flushed=flushed, stamp=stamp,
         table=fields.table, bkeys=fields.bkeys, bids=fields.bids,
         skeys=fields.skeys, sids=fields.sids, stash_n=fields.stash_n,
         n_psync=_bump(state.n_psync, new_psync),
         n_ops=_bump(state.n_ops, jnp.sum(active.astype(jnp.int32))),
         size=state.size + count,
         overflow=state.overflow | plan.overflow | iovf,
+        epoch=state.epoch,
     ), win
 
 
@@ -609,6 +628,8 @@ def _remove_impl(state: SetState, keys: jax.Array, *, mode: str,
         win.astype(state.cur.dtype)).astype(jnp.bool_)
     cur = jnp.where(mark, DELETED, state.cur)
     flushed = jnp.where(mark, DELETED, state.flushed)
+    # Stamp rides the delete's commit psync (same line as the stage word).
+    stamp = jnp.where(mark, state.epoch, state.stamp)
 
     fields = index_fields(state)
     if index_update is not None:
@@ -624,12 +645,14 @@ def _remove_impl(state: SetState, keys: jax.Array, *, mode: str,
 
     return SetState(
         keys=state.keys, values=state.values, cur=cur, flushed=flushed,
+        stamp=stamp,
         table=fields.table, bkeys=fields.bkeys, bids=fields.bids,
         skeys=fields.skeys, sids=fields.sids, stash_n=fields.stash_n,
         n_psync=_bump(state.n_psync, new_psync),
         n_ops=_bump(state.n_ops, jnp.sum(active.astype(jnp.int32))),
         size=state.size - count,
         overflow=state.overflow,
+        epoch=state.epoch,
     ), win
 
 
@@ -654,14 +677,19 @@ def _contains_impl(state: SetState, keys: jax.Array, *, mode: str,
 
     new_psync = jnp.int32(0)
     flushed = state.flushed
+    stamp = state.stamp
     if mode in ("linkfree", "logfree"):
         need = present & (state.flushed[eidx] < VALID)
         flushed = flushed.at[jnp.where(need, eidx, 0)].max(
             jnp.where(need, VALID, 0))
+        # The read-side flush durably changes the slot: stamp it (it rides
+        # the flush's own psync -- SOFT contains stays a pure read).
+        stamp = stamp.at[jnp.where(need, eidx, 0)].max(
+            jnp.where(need, state.epoch, 0))
         new_psync = jnp.sum(need.astype(jnp.int32))
 
     state = state._replace(
-        flushed=flushed,
+        flushed=flushed, stamp=stamp,
         n_psync=_bump(state.n_psync, new_psync),
         n_ops=_bump(state.n_ops, jnp.sum(active.astype(jnp.int32))),
     )
@@ -709,12 +737,14 @@ def contains_batch(state: SetState, keys: jax.Array,
 # Crash + recovery
 # ---------------------------------------------------------------------------
 
-def crash(state: SetState, u: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+def crash(state: SetState, u: jax.Array
+          ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Power failure: volatile state (table!) is lost.  Returns only what NVM
-    holds: per-node persisted stage plus key/value payloads.  ``u`` in [0,1)
-    per node drives the eviction adversary."""
+    holds: per-node persisted stage, key/value payloads, and the epoch stamp
+    plane (durable: every stamp write rides a psync'd commit line).  ``u`` in
+    [0,1) per node drives the eviction adversary."""
     persisted = crash_persisted_stage(state.cur, state.flushed, u)
-    return persisted, state.keys, state.values
+    return persisted, state.keys, state.values, state.stamp
 
 
 def _rebuild_from_member(member: jax.Array, keys: jax.Array,
@@ -723,7 +753,8 @@ def _rebuild_from_member(member: jax.Array, keys: jax.Array,
                          bucket_width: int = 0, stash_size: int = 0,
                          build_table: bool = True,
                          index_init: Optional[Callable[[SetState], SetState]]
-                         = None) -> SetState:
+                         = None,
+                         stamp: Optional[jax.Array] = None) -> SetState:
     """Shared recovery rebuild: member mask -> fresh SetState (free list +
     volatile-index reconstruction).  Used by both the legacy recover() and
     the engine's backend-aware recover.  ``index_init`` is the backend's
@@ -742,6 +773,12 @@ def _rebuild_from_member(member: jax.Array, keys: jax.Array,
         cur=cur, flushed=cur,
         size=jnp.sum(member.astype(jnp.int32)),
     )
+    if stamp is not None:
+        # Recovery never writes NVM: the stamp plane survives verbatim, and
+        # the next generation starts strictly above every durable stamp (the
+        # snapshotter additionally raises it past its latest watermark).
+        state = state._replace(
+            stamp=stamp, epoch=jnp.maximum(jnp.max(stamp), 0) + 1)
     if build_table:
         ids = jnp.arange(n, dtype=jnp.int32)
         table, ovf = _table_write_ref(state.table, state.keys, ids, member,
@@ -754,12 +791,13 @@ def _rebuild_from_member(member: jax.Array, keys: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("table_factor",))
 def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array,
+            stamp: Optional[jax.Array] = None,
             table_factor: int = 4) -> SetState:
     """Rebuild a fresh set from the durable areas (Sections 3.5 / 4.6):
     persisted == VALID -> member; everything else -> free list.  No psync is
     ever issued: payloads are already durable."""
     return _rebuild_from_member(persisted == VALID, keys, values,
-                                table_factor)
+                                table_factor, stamp=stamp)
 
 
 def crash_and_recover(state: SetState, u: jax.Array,

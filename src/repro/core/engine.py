@@ -48,6 +48,7 @@ from jax import lax
 
 from repro.core import durable_set as DS
 from repro.core.durable_set import SetState, MODES
+from repro.core.nvm import FREE, VALID
 from repro.kernels.hash_probe import ops as hp_ops
 from repro.kernels.recovery_scan import ops as rs_ops
 
@@ -457,6 +458,7 @@ def apply_batch(state: SetState, ops: jax.Array, keys: jax.Array,
 
 
 def recover_impl(persisted: jax.Array, keys: jax.Array, values: jax.Array,
+                 stamp: Optional[jax.Array] = None,
                  *, spec: SetSpec) -> Tuple[SetState, jax.Array]:
     """Unjitted recovery body (vmappable -- the shard runtime rebuilds all
     shards' volatile indexes in one vmapped dispatch)."""
@@ -467,12 +469,14 @@ def recover_impl(persisted: jax.Array, keys: jax.Array, values: jax.Array,
         member, keys, values, spec.table_factor, spec.max_probe,
         n_buckets=nb, bucket_width=w, stash_size=s,
         build_table=backend.builds_probe_table,
-        index_init=functools.partial(backend.init_index, spec))
+        index_init=functools.partial(backend.init_index, spec),
+        stamp=stamp)
     return state, hist
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))
-def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array, *,
+def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array,
+            stamp: Optional[jax.Array] = None, *,
             spec: SetSpec) -> Tuple[SetState, jax.Array]:
     """Rebuild from the durable areas (Sections 3.5 / 4.6) through the
     spec's backend: classification via backend.recover_scan (the Pallas
@@ -481,12 +485,194 @@ def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array, *,
     bulk-built (``build_buckets`` via backend.init_index).
     Returns (state, stage histogram i32[5]) -- the recovery telemetry.
     No psync is ever issued: payloads are already durable."""
-    return recover_impl(persisted, keys, values, spec=spec)
+    return recover_impl(persisted, keys, values, stamp, spec=spec)
 
 
 def crash_and_recover(state: SetState, u: jax.Array, *, spec: SetSpec
                       ) -> Tuple[SetState, jax.Array]:
     return recover(*DS.crash(state, u), spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot + delta-log hybrid recovery (DESIGN.md §11).
+#
+# A snapshot is the CANONICAL recovered state at a watermark W: the
+# snapshotter captures the durable planes off the hot path, runs the normal
+# ``recover`` on them (so the stored index is exactly what a full rebuild
+# would produce), and persists the result.  Every durable commit stamps its
+# slot with the current epoch inside the SAME scatter that moves the stage
+# word, so ``stamp > W`` is a complete delta log that costs the mutation
+# path zero extra psyncs.  Hybrid recovery then merges the crash-time
+# planes into the snapshot at the delta slots only, and re-canonicalizes
+# exactly the bucket rows those slots touch -- O(delta), bit-identical to
+# the full-pool rebuild (bucket rows and the stash are pure functions of
+# the member set in node-id order, see ``build_buckets``).
+# ---------------------------------------------------------------------------
+
+
+def supports_hybrid_recovery(spec: SetSpec) -> bool:
+    """The probe backend's recovery table is built by SEQUENTIAL first-free
+    claiming over the whole pool (``_table_write_ref``): a slot's final
+    probe position depends on every earlier slot, so no O(delta) patch can
+    be bit-identical.  Hybrid recovery supports the bucket and scan
+    backends; probe falls back to the full rebuild."""
+    return not get_backend(spec.backend).builds_probe_table
+
+
+def _delta_bucket_patch(snap: SetState, keys2, cur2, delta_idx, gi, valid,
+                        member_d, *, spec: SetSpec):
+    """Re-canonicalize exactly the bucket rows affected by the delta.
+
+    Candidates = every live node hashing to an affected bucket (the buckets
+    of the delta slots' snapshot-time AND crash-time keys).  They are
+    gathered in ascending node-id order, so rank-within-bucket among the
+    candidates equals rank-within-bucket in the full ``build_buckets``
+    repack -- cleared rows rebuilt this way are bit-identical to a full
+    rebuild.  The dense stash is globally id-ordered, so it is recomputed
+    from (kept unaffected spills) + (affected-bucket spills) with the same
+    ``jnp.where(size=s)`` pack ``bucket_init`` uses."""
+    from repro.core.nvm import hash32, EMPTY
+    n = spec.capacity
+    nb, w = spec.bucket_geometry()
+    s = spec.stash_size
+    d = delta_idx.shape[0]
+
+    # affected buckets: where the delta slots' old and new keys hash
+    old_member = valid & (snap.cur[gi] == VALID)
+    new_member = valid & member_d
+    b_old = (hash32(snap.keys[gi]) % jnp.uint32(nb)).astype(jnp.int32)
+    b_new = (hash32(keys2[gi]) % jnp.uint32(nb)).astype(jnp.int32)
+    aff = jnp.zeros((nb + 1,), jnp.bool_) \
+        .at[jnp.where(old_member, b_old, nb)].set(True) \
+        .at[jnp.where(new_member, b_new, nb)].set(True)[:nb]
+
+    # candidates: all live members of affected buckets, ascending node id.
+    # K bounds them: <= w per affected bucket row (<= 2 buckets per delta
+    # slot) + every pre-existing stash spill + the delta slots themselves;
+    # past K the stash has overflowed (> s spills) and the latch fires.
+    live2 = cur2 == VALID
+    h2 = (hash32(keys2) % jnp.uint32(nb)).astype(jnp.int32)
+    cand_mask = live2 & aff[h2]
+    k = min(n, 2 * d * w + s + d)
+    cand = jnp.where(cand_mask, size=k, fill_value=n)[0].astype(jnp.int32)
+    cvalid = cand < n
+    cg = jnp.where(cvalid, cand, 0)
+    ck = jnp.where(cvalid, keys2[cg], 0)
+    cb = jnp.where(cvalid, h2[cg], nb)
+
+    # rank within bucket among candidates (== rank in the full repack:
+    # stable argsort groups buckets preserving ascending-id order)
+    order = jnp.argsort(cb)
+    sb = cb[order]
+    pos = jnp.arange(k, dtype=jnp.int32)
+    group_start = jnp.full((nb + 1,), k, jnp.int32).at[sb].min(
+        pos, mode="drop")
+    rank = pos - group_start[jnp.clip(sb, 0, nb)]
+    ok = (sb < nb) & (rank < w)
+
+    # clear affected rows, rebuild them canonically
+    bkeys = jnp.where(aff[:, None], 0, snap.bkeys)
+    bids = jnp.where(aff[:, None], EMPTY, snap.bids)
+    tb = jnp.where(ok, sb, nb)
+    tw = jnp.where(ok, rank, 0)
+    bkeys = bkeys.at[tb, tw].set(ck[order], mode="drop")
+    bids = bids.at[tb, tw].set(cand[order], mode="drop")
+
+    # stash: spills = kept unaffected spills + affected-bucket overflow,
+    # re-packed in ascending node-id order exactly like bucket_init
+    prior = snap.sids >= 0
+    pb = (hash32(snap.skeys) % jnp.uint32(nb)).astype(jnp.int32)
+    keep = prior & ~aff[jnp.clip(pb, 0, nb - 1)]
+    kept_ids = jnp.where(keep, snap.sids, 0)
+    spilled = (~ok) & (sb < nb)
+    spill_ids = jnp.where(spilled, cand[order], 0)
+    spill_mask = jnp.zeros((n,), jnp.int32) \
+        .at[kept_ids].max(keep.astype(jnp.int32)) \
+        .at[spill_ids].max(spilled.astype(jnp.int32)) > 0
+    spill = jnp.sum(spill_mask.astype(jnp.int32))
+    idx = jnp.where(spill_mask, size=s, fill_value=-1)[0].astype(jnp.int32)
+    got = idx >= 0
+    sids = jnp.where(got, idx, EMPTY)
+    skeys = jnp.where(got, keys2[jnp.clip(idx, 0)], 0)
+    return bkeys, bids, skeys, sids, jnp.minimum(spill, s), spill > s
+
+
+def hybrid_recover_impl(snap: SetState, persisted: jax.Array,
+                        keys: jax.Array, values: jax.Array,
+                        stamp: jax.Array, delta_idx: jax.Array,
+                        *, spec: SetSpec) -> SetState:
+    """Unjitted hybrid-recovery body (vmappable over a stacked shard axis).
+
+    ``snap`` is the canonical snapshot state at watermark W;
+    ``persisted``/``keys``/``values``/``stamp`` are the crash-time durable
+    planes; ``delta_idx`` i32[D] lists the slots with ``stamp > W`` (padded
+    with ``capacity``).  Slots outside the delta are bit-identical between
+    capture and crash (every durable mutation stamps its slot inside the
+    commit scatter), so classification -- the ``recovery_scan`` -- runs
+    over the gathered delta only.  No psync is ever issued."""
+    backend = get_backend(spec.backend)
+    if backend.builds_probe_table:
+        raise ValueError(
+            f"backend {spec.backend!r} does not support hybrid recovery "
+            "(sequential probe-table build has no canonical delta patch); "
+            "use the full recover()")
+    n = spec.capacity
+    valid = delta_idx < n
+    gi = jnp.where(valid, delta_idx, 0)
+    # classification over the compacted delta only (padding -> stage FREE)
+    member_d, _ = backend.recover_scan(
+        spec, jnp.where(valid, persisted[gi], 0))
+    member_d = member_d & valid
+
+    scat = jnp.where(valid, delta_idx, n)           # OOB scatter => dropped
+    keys2 = snap.keys.at[scat].set(
+        jnp.where(member_d, keys[gi], 0), mode="drop")
+    values2 = snap.values.at[scat].set(
+        jnp.where(member_d, values[gi], 0), mode="drop")
+    cur2 = snap.cur.at[scat].set(
+        jnp.where(member_d, VALID, FREE), mode="drop")
+    stamp2 = snap.stamp.at[scat].set(stamp[gi], mode="drop")
+    was_member = valid & (snap.cur[gi] == VALID)
+    size2 = snap.size + jnp.sum(member_d.astype(jnp.int32)) \
+        - jnp.sum(was_member.astype(jnp.int32))
+
+    state = snap._replace(
+        keys=keys2, values=values2, cur=cur2, flushed=cur2, stamp=stamp2,
+        size=size2,
+        epoch=jnp.maximum(jnp.max(stamp2), 0) + 1,
+    )
+    nb, _, _ = backend.state_geometry(spec)
+    if nb > 0:       # bucket backend: canonical O(delta) index patch
+        bkeys, bids, skeys, sids, stash_n, ovf = _delta_bucket_patch(
+            snap, keys2, cur2, delta_idx, gi, valid, member_d, spec=spec)
+        state = state._replace(bkeys=bkeys, bids=bids, skeys=skeys,
+                               sids=sids, stash_n=stash_n, overflow=ovf)
+    else:            # scan backend: no volatile index to patch
+        state = state._replace(overflow=jnp.zeros((), jnp.bool_))
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
+def hybrid_recover(snap: SetState, persisted: jax.Array, keys: jax.Array,
+                   values: jax.Array, stamp: jax.Array,
+                   delta_idx: jax.Array, *, spec: SetSpec) -> SetState:
+    """Jitted snapshot + delta-log recovery: O(delta) work on top of the
+    restored snapshot, bit-identical to ``recover`` on the same crash
+    planes (pinned by tests/test_snapshot.py)."""
+    return hybrid_recover_impl(snap, persisted, keys, values, stamp,
+                               delta_idx, spec=spec)
+
+
+def pad_delta(idx: np.ndarray, capacity: int) -> np.ndarray:
+    """Pad a host-side delta slot list to a power-of-two length >= 8 with
+    ``capacity`` (the OOB-drop sentinel), so the gathered classification
+    stays inside ``recovery_scan``'s tile divisibility and the number of
+    distinct jit shapes is O(log N), not O(delta)."""
+    idx = np.asarray(idx, np.int32)
+    d = max(8, 1 << max(0, int(idx.size) - 1).bit_length())
+    out = np.full((d,), capacity, np.int32)
+    out[:idx.size] = idx
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -559,16 +745,30 @@ class MetricsMixin:
         if self._m is not None:
             self._m_bridge.fold(psync=self.psyncs, op=self.ops)
 
-    def _metrics_post_recovery(self, scanned_slots: int):
-        """Record the recovery: duration, scanned-slot gauge, and the
+    def _metrics_post_recovery(self, scanned_slots: int,
+                               from_snapshot: int = 0,
+                               from_delta: Optional[int] = None):
+        """Record the recovery: duration, scanned-slot gauges, and the
         recovery-psync counter (exactly 0 by construction -- payloads are
-        already durable; the counter existing makes that checkable)."""
+        already durable; the counter existing makes that checkable).
+
+        ``scanned_slots`` is what the recovery CLASSIFIED (the
+        ``recovery_scan`` input size); the split gauges attribute the
+        recovered state to its sources: ``from_snapshot`` slots restored
+        from the latest snapshot vs ``from_delta`` slots re-scanned because
+        their stamp was newer than the watermark.  A full-pool recovery is
+        all-delta (from_snapshot=0, from_delta=scanned_slots)."""
         if self._m is None:
             return
+        if from_delta is None:
+            from_delta = scanned_slots
         m, name = self._m, self._m_name
         m.counter(f"{name}.recoveries").inc()
         m.counter(f"{name}.recovery_psyncs").inc(self.psyncs)
         m.gauge(f"{name}.last_recovery_scanned_slots").set(scanned_slots)
+        m.gauge(f"{name}.last_recovery_from_snapshot_slots").set(
+            from_snapshot)
+        m.gauge(f"{name}.last_recovery_from_delta_slots").set(from_delta)
         m.gauge(f"{name}.last_recovery_seconds").set(
             self.last_recovery_seconds)
         m.histogram(f"span.{name}.recovery").record(
@@ -665,6 +865,108 @@ class DurableMap(MetricsMixin):
         self.last_recovery_seconds = time.perf_counter() - t0
         self._overflow_warned = False    # fresh latch after the rebuild
         self._metrics_post_recovery(scanned_slots=self.spec.capacity)
+        self._check_overflow()
+        return self
+
+    # --- snapshot + delta-log hybrid recovery (DESIGN.md §11) -----------
+
+    _SNAP_FIELDS = ("keys", "values", "cur", "stamp", "bkeys", "bids",
+                    "skeys", "sids", "stash_n", "size", "overflow")
+
+    @property
+    def supports_hybrid(self) -> bool:
+        return supports_hybrid_recovery(self.spec)
+
+    def snapshot_capture(self) -> dict:
+        """Cheap synchronous phase: host-copy the durable planes at a
+        dispatch boundary and open a new stamp generation.  Every commit
+        from here on stamps ``> W``, so the op stream IS the delta log on
+        top of this capture.  Zero psyncs: every plane copied is already
+        durable (``cur == flushed`` at each dispatch boundary -- commits
+        move both in one scatter), so this is a pure read of NVM."""
+        w = int(self.state.epoch)
+        cap = {
+            "watermark": w,
+            "raw_stage": np.asarray(self.state.flushed),
+            "keys": np.asarray(self.state.keys),
+            "values": np.asarray(self.state.values),
+            "stamp": np.asarray(self.state.stamp),
+        }
+        self.state = self.state._replace(epoch=jnp.asarray(w + 1, jnp.int32))
+        return cap
+
+    def snapshot_build(self, cap: dict):
+        """Expensive asynchronous phase (background-thread safe: a pure
+        function of the captured copies): canonicalize the capture by
+        running the normal ``recover`` on it, so the stored snapshot is
+        exactly the full-rebuild state at watermark W and hybrid recovery
+        can patch it in O(delta).  Returns (planes, meta) for the store."""
+        st, hist = recover(jnp.asarray(cap["raw_stage"]),
+                           jnp.asarray(cap["keys"]),
+                           jnp.asarray(cap["values"]),
+                           jnp.asarray(cap["stamp"]), spec=self.spec)
+        jax.block_until_ready(st.keys)
+        planes = {f: np.asarray(getattr(st, f)) for f in self._SNAP_FIELDS}
+        planes["raw_stage"] = cap["raw_stage"]
+        meta = {"kind": "map", "watermark": cap["watermark"],
+                "hist": np.asarray(hist).tolist()}
+        return planes, meta
+
+    def _snapshot_state(self, planes: dict) -> SetState:
+        """Reconstruct the canonical snapshot state from stored planes
+        (the probe ``table`` is all-EMPTY for hybrid-capable backends, so
+        ``make_state`` provides it; counters restart at zero exactly as
+        full recovery's do)."""
+        cur = jnp.asarray(planes["cur"])
+        return make_state(self.spec)._replace(
+            keys=jnp.asarray(planes["keys"]),
+            values=jnp.asarray(planes["values"]),
+            cur=cur, flushed=cur,
+            stamp=jnp.asarray(planes["stamp"]),
+            bkeys=jnp.asarray(planes["bkeys"]),
+            bids=jnp.asarray(planes["bids"]),
+            skeys=jnp.asarray(planes["skeys"]),
+            sids=jnp.asarray(planes["sids"]),
+            stash_n=jnp.asarray(planes["stash_n"]),
+            size=jnp.asarray(planes["size"]),
+            overflow=jnp.asarray(planes["overflow"]))
+
+    def hybrid_crash_and_recover(self, planes: dict, meta: dict, u=None):
+        """Crash (losing the volatile index) and recover from the stored
+        snapshot + the stamp delta instead of the full pool: O(delta)
+        classification and index patch, bit-identical to
+        ``crash_and_recover`` under the same adversary ``u``.  Recovery
+        psyncs: exactly 0, as always."""
+        if u is None:
+            u = jnp.zeros_like(self.state.cur, jnp.float32)
+        n = self.spec.capacity
+        w = int(meta["watermark"])
+        self._metrics_pre_recovery()
+        t0 = time.perf_counter()
+        crashed = DS.crash(self.state, jnp.asarray(u))
+        stamp_h = np.asarray(crashed[3])
+        delta = np.flatnonzero(stamp_h > w).astype(np.int32)
+        delta_idx = pad_delta(delta, n)
+        snap = self._snapshot_state(planes)
+        self.state = hybrid_recover(snap, *crashed,
+                                    jnp.asarray(delta_idx), spec=self.spec)
+        # Exact O(delta) stage-histogram correction: the canonical
+        # snapshot collapsed DELETED slots to FREE, so the stored
+        # capture-time raw stages reconstruct what a full scan over the
+        # crash planes would have counted.
+        crash_stage = np.asarray(crashed[0])
+        hist = (np.asarray(meta["hist"], np.int64)
+                - np.bincount(np.clip(planes["raw_stage"][delta], 0, 4),
+                              minlength=5)
+                + np.bincount(np.clip(crash_stage[delta], 0, 4),
+                              minlength=5))
+        self.last_recovery_hist = hist.astype(np.int32)
+        jax.block_until_ready(self.state.keys)
+        self.last_recovery_seconds = time.perf_counter() - t0
+        self._overflow_warned = False
+        self._metrics_post_recovery(scanned_slots=int(delta.size),
+                                    from_snapshot=n - int(delta.size),
+                                    from_delta=int(delta.size))
         self._check_overflow()
         return self
 

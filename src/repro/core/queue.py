@@ -112,6 +112,9 @@ class QueueState(NamedTuple):
     tickets: jax.Array   # i32[N] slot incarnation ticket (== virtual seq no)
     cur: jax.Array       # i32[N] volatile lifecycle stage
     flushed: jax.Array   # i32[N] stage covered by the last explicit psync
+    stamp: jax.Array     # i32[N] epoch of the last durable commit per slot
+    #                      (rides the commit scatter: zero extra psyncs;
+    #                      DESIGN.md §11 snapshot + delta-log recovery)
     # --- volatile cursors (never persisted)
     head: jax.Array      # i32[] next dequeue ticket
     tail: jax.Array      # i32[] next enqueue ticket
@@ -119,6 +122,8 @@ class QueueState(NamedTuple):
     n_psync: jax.Array   # explicit flush+fence count
     n_ops: jax.Array     # attempted operations (failed ones included)
     overflow: jax.Array  # bool[] full-enqueue-rejected / invariant latch
+    epoch: jax.Array     # i32[] VOLATILE generation counter (snapshotter
+    #                      watermark discipline, same as SetState.epoch)
 
 
 def make_state(spec: QueueSpec) -> QueueState:
@@ -128,11 +133,13 @@ def make_state(spec: QueueSpec) -> QueueState:
         tickets=jnp.zeros((n,), jnp.int32),
         cur=jnp.zeros((n,), jnp.int32),
         flushed=jnp.zeros((n,), jnp.int32),
+        stamp=jnp.zeros((n,), jnp.int32),
         head=jnp.zeros((), jnp.int32),
         tail=jnp.zeros((), jnp.int32),
         n_psync=jnp.zeros((), DS.COUNTER_DTYPE),
         n_ops=jnp.zeros((), DS.COUNTER_DTYPE),
         overflow=jnp.zeros((), jnp.bool_),
+        epoch=jnp.ones((), jnp.int32),   # stamp==0 means "never committed"
     )
 
 
@@ -183,11 +190,14 @@ def enqueue_impl(state: QueueState, vals: jax.Array, *, spec: QueueSpec,
         tickets=state.tickets.at[sidx].set(ticket, mode="drop"),
         cur=state.cur.at[sidx].set(VALID, mode="drop"),
         flushed=state.flushed.at[sidx].set(VALID, mode="drop"),
+        stamp=state.stamp.at[sidx].set(
+            jnp.broadcast_to(state.epoch, sidx.shape), mode="drop"),
         head=state.head,
         tail=state.tail + count,
         n_psync=DS._bump(state.n_psync, count * spec.psync_per_success()),
         n_ops=DS._bump(state.n_ops, jnp.sum(active.astype(jnp.int32))),
         overflow=state.overflow | full,
+        epoch=state.epoch,
     ), win, jnp.where(win, ticket, -1)
 
 
@@ -210,11 +220,14 @@ def dequeue_impl(state: QueueState, want: jax.Array, *, spec: QueueSpec,
         vals=state.vals, tickets=state.tickets,
         cur=state.cur.at[sidx].set(DELETED, mode="drop"),
         flushed=state.flushed.at[sidx].set(DELETED, mode="drop"),
+        stamp=state.stamp.at[sidx].set(
+            jnp.broadcast_to(state.epoch, sidx.shape), mode="drop"),
         head=state.head + count,
         tail=state.tail,
         n_psync=DS._bump(state.n_psync, count * spec.psync_per_success()),
         n_ops=DS._bump(state.n_ops, jnp.sum(want.astype(jnp.int32))),
         overflow=state.overflow,
+        epoch=state.epoch,
     ), got, win, jnp.where(win, ticket, -1)
 
 
@@ -255,15 +268,17 @@ def peek(state: QueueState, want: jax.Array, *, spec: QueueSpec,
 
 
 def crash(state: QueueState, u: jax.Array
-          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+          ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Power failure: head/tail (the volatile cursors) are LOST.  Returns
-    only what NVM holds -- per-slot persisted stage plus ticket/value
-    payloads; ``u`` in [0, 1) per slot drives the eviction adversary."""
+    only what NVM holds -- per-slot persisted stage, ticket/value payloads,
+    and the epoch stamp plane (each stamp write rode a psync'd commit);
+    ``u`` in [0, 1) per slot drives the eviction adversary."""
     persisted = crash_persisted_stage(state.cur, state.flushed, u)
-    return persisted, state.tickets, state.vals
+    return persisted, state.tickets, state.vals, state.stamp
 
 
 def recover_impl(persisted: jax.Array, tickets: jax.Array, vals: jax.Array,
+                 stamp: Optional[jax.Array] = None,
                  *, spec: QueueSpec) -> Tuple[QueueState, jax.Array]:
     """Unjitted recovery body (pure jnp reductions => vmappable, e.g. over
     a future stacked-queue axis).  Rebuilds head/tail from persisted
@@ -291,30 +306,105 @@ def recover_impl(persisted: jax.Array, tickets: jax.Array, vals: jax.Array,
     tail = jnp.where(any_m, max_live + 1, head)
     n_live = jnp.sum(member.astype(jnp.int32))
     cur = jnp.where(member, VALID, FREE)
+    if stamp is None:
+        stamp = jnp.zeros_like(tickets)
+        epoch = jnp.ones((), jnp.int32)
+    else:
+        # Recovery never writes NVM: stamps survive verbatim; the next
+        # generation starts strictly above every durable stamp.
+        epoch = jnp.maximum(jnp.max(stamp), 0) + 1
     state = QueueState(
         vals=jnp.where(member, vals, 0),
         tickets=jnp.where(member, tickets, 0),
-        cur=cur, flushed=cur,
+        cur=cur, flushed=cur, stamp=stamp,
         head=head, tail=tail,
         n_psync=jnp.zeros((), DS.COUNTER_DTYPE),
         n_ops=jnp.zeros((), DS.COUNTER_DTYPE),
         overflow=(tail - head) != n_live,     # FIFO-hole invariant latch
+        epoch=epoch,
     )
     return state, hist
 
 
 @functools.partial(jax.jit, static_argnames=("spec",))
-def recover(persisted: jax.Array, tickets: jax.Array, vals: jax.Array, *,
+def recover(persisted: jax.Array, tickets: jax.Array, vals: jax.Array,
+            stamp: Optional[jax.Array] = None, *,
             spec: QueueSpec) -> Tuple[QueueState, jax.Array]:
     """Jitted recovery: classification via the ``recovery_scan`` kernel
     (Pallas where eligible) + head/tail reconstruction.  Returns
     (state, stage histogram i32[5])."""
-    return recover_impl(persisted, tickets, vals, spec=spec)
+    return recover_impl(persisted, tickets, vals, stamp, spec=spec)
 
 
 def crash_and_recover(state: QueueState, u: jax.Array, *, spec: QueueSpec
                       ) -> Tuple[QueueState, jax.Array]:
     return recover(*crash(state, u), spec=spec)
+
+
+def hybrid_recover_impl(snap: QueueState, persisted: jax.Array,
+                        tickets: jax.Array, vals: jax.Array,
+                        stamp: jax.Array, delta_idx: jax.Array,
+                        *, spec: QueueSpec) -> QueueState:
+    """Unjitted snapshot + delta-log recovery body (DESIGN.md §11).
+
+    ``snap`` is the canonical recovered state at watermark W (its
+    ``head``/``tail`` are the capture-time cursors); the other planes are
+    crash-time NVM contents and ``delta_idx`` i32[D] lists the slots with
+    ``stamp > W`` (padded with ``capacity``).  Classification runs over the
+    gathered delta only; cursor reconstruction reuses the full-recovery
+    formulas on the merged planes, with one subtlety: the newest durably
+    retired ticket is either in the delta or was already retired at
+    capture, where FIFO contiguity pins it to ``snap.head - 1`` (every
+    ticket below the head cursor is durably dequeued, every ticket at or
+    above it is not).  Bit-identical to ``recover`` on the same crash
+    planes; no psync is ever issued."""
+    n = spec.capacity
+    valid = delta_idx < n
+    gi = jnp.where(valid, delta_idx, 0)
+    d_per = jnp.where(valid, persisted[gi], 0)
+    member_d, _ = rs_ops.recovery_scan(d_per, use_pallas=spec.use_pallas,
+                                       interpret=spec.interpret)
+    member_d = member_d & valid
+
+    scat = jnp.where(valid, delta_idx, n)           # OOB scatter => dropped
+    tickets_d = jnp.where(valid, tickets[gi], 0)
+    tickets2 = snap.tickets.at[scat].set(
+        jnp.where(member_d, tickets_d, 0), mode="drop")
+    vals2 = snap.vals.at[scat].set(
+        jnp.where(member_d, vals[gi], 0), mode="drop")
+    cur2 = snap.cur.at[scat].set(
+        jnp.where(member_d, VALID, FREE), mode="drop")
+    stamp2 = snap.stamp.at[scat].set(stamp[gi], mode="drop")
+
+    member2 = cur2 == VALID
+    any_m = member2.any()
+    big = jnp.int32(np.iinfo(np.int32).max)
+    min_live = jnp.min(jnp.where(member2, tickets2, big))
+    max_live = jnp.max(jnp.where(member2, tickets2, -big))
+    max_del_delta = jnp.max(jnp.where(valid & (d_per == DELETED),
+                                      tickets_d, -1))
+    max_del = jnp.maximum(snap.head - 1, max_del_delta)
+    head = jnp.where(any_m, min_live, max_del + 1)
+    tail = jnp.where(any_m, max_live + 1, head)
+    n_live = jnp.sum(member2.astype(jnp.int32))
+    return snap._replace(
+        vals=vals2, tickets=tickets2, cur=cur2, flushed=cur2, stamp=stamp2,
+        head=head, tail=tail,
+        n_psync=jnp.zeros((), DS.COUNTER_DTYPE),
+        n_ops=jnp.zeros((), DS.COUNTER_DTYPE),
+        overflow=(tail - head) != n_live,
+        epoch=jnp.maximum(jnp.max(stamp2), 0) + 1,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(0,))
+def hybrid_recover(snap: QueueState, persisted: jax.Array,
+                   tickets: jax.Array, vals: jax.Array, stamp: jax.Array,
+                   delta_idx: jax.Array, *, spec: QueueSpec) -> QueueState:
+    """Jitted snapshot + delta-log recovery, bit-identical to ``recover``
+    on the same crash planes (pinned by tests/test_snapshot.py)."""
+    return hybrid_recover_impl(snap, persisted, tickets, vals, stamp,
+                               delta_idx, spec=spec)
 
 
 # ---------------------------------------------------------------------------
@@ -400,6 +490,87 @@ class DurableQueue(MetricsMixin):
         self.last_recovery_seconds = time.perf_counter() - t0
         self._overflow_warned = False     # fresh latch after the rebuild
         self._metrics_post_recovery(scanned_slots=self.spec.capacity)
+        self._check_overflow()
+        return self
+
+    # --- snapshot + delta-log hybrid recovery (DESIGN.md §11) -----------
+
+    _SNAP_FIELDS = ("vals", "tickets", "cur", "stamp", "head", "tail",
+                    "overflow")
+
+    supports_hybrid = True    # the ring has no order-dependent index
+
+    def snapshot_capture(self) -> dict:
+        """Host-copy the durable planes at a dispatch boundary and open a
+        new stamp generation (watermark discipline identical to
+        ``DurableMap.snapshot_capture``; zero psyncs -- a pure NVM read)."""
+        w = int(self.state.epoch)
+        cap = {
+            "watermark": w,
+            "raw_stage": np.asarray(self.state.flushed),
+            "tickets": np.asarray(self.state.tickets),
+            "vals": np.asarray(self.state.vals),
+            "stamp": np.asarray(self.state.stamp),
+        }
+        self.state = self.state._replace(epoch=jnp.asarray(w + 1, jnp.int32))
+        return cap
+
+    def snapshot_build(self, cap: dict):
+        """Canonicalize the capture with the normal ``recover`` (background
+        -thread safe); the stored snapshot is the full-rebuild state at the
+        watermark, cursors included.  Returns (planes, meta)."""
+        st, hist = recover(jnp.asarray(cap["raw_stage"]),
+                           jnp.asarray(cap["tickets"]),
+                           jnp.asarray(cap["vals"]),
+                           jnp.asarray(cap["stamp"]), spec=self.spec)
+        jax.block_until_ready(st.vals)
+        planes = {f: np.asarray(getattr(st, f)) for f in self._SNAP_FIELDS}
+        planes["raw_stage"] = cap["raw_stage"]
+        meta = {"kind": "queue", "watermark": cap["watermark"],
+                "hist": np.asarray(hist).tolist()}
+        return planes, meta
+
+    def _snapshot_state(self, planes: dict) -> QueueState:
+        cur = jnp.asarray(planes["cur"])
+        return make_state(self.spec)._replace(
+            vals=jnp.asarray(planes["vals"]),
+            tickets=jnp.asarray(planes["tickets"]),
+            cur=cur, flushed=cur,
+            stamp=jnp.asarray(planes["stamp"]),
+            head=jnp.asarray(planes["head"]),
+            tail=jnp.asarray(planes["tail"]),
+            overflow=jnp.asarray(planes["overflow"]))
+
+    def hybrid_crash_and_recover(self, planes: dict, meta: dict, u=None):
+        """Crash (losing head/tail) and recover from the stored snapshot +
+        the stamp delta; bit-identical to ``crash_and_recover`` under the
+        same adversary.  Recovery psyncs: exactly 0."""
+        from repro.core.engine import pad_delta
+        if u is None:
+            u = jnp.zeros_like(self.state.cur, jnp.float32)
+        n = self.spec.capacity
+        w = int(meta["watermark"])
+        self._metrics_pre_recovery()
+        t0 = time.perf_counter()
+        crashed = crash(self.state, jnp.asarray(u))
+        delta = np.flatnonzero(np.asarray(crashed[3]) > w).astype(np.int32)
+        delta_idx = pad_delta(delta, n)
+        snap = self._snapshot_state(planes)
+        self.state = hybrid_recover(snap, *crashed,
+                                    jnp.asarray(delta_idx), spec=self.spec)
+        crash_stage = np.asarray(crashed[0])
+        hist = (np.asarray(meta["hist"], np.int64)
+                - np.bincount(np.clip(planes["raw_stage"][delta], 0, 4),
+                              minlength=5)
+                + np.bincount(np.clip(crash_stage[delta], 0, 4),
+                              minlength=5))
+        self.last_recovery_hist = hist.astype(np.int32)
+        jax.block_until_ready(self.state.vals)
+        self.last_recovery_seconds = time.perf_counter() - t0
+        self._overflow_warned = False
+        self._metrics_post_recovery(scanned_slots=int(delta.size),
+                                    from_snapshot=n - int(delta.size),
+                                    from_delta=int(delta.size))
         self._check_overflow()
         return self
 

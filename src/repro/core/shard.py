@@ -399,7 +399,7 @@ def dispatch_get(state: SetState, keys, *, sspec: ShardSpec,
 
 
 def crash(state: SetState, u: jax.Array
-          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+          ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Power failure across all shards.  ``u`` is the per-shard adversary,
     (S, N_shard) in [0, 1); the stage-machine crash is elementwise, so the
     stacked state needs no explicit vmap."""
@@ -407,14 +407,31 @@ def crash(state: SetState, u: jax.Array
 
 
 @functools.partial(jax.jit, static_argnames=("sspec",))
-def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array, *,
+def recover(persisted: jax.Array, keys: jax.Array, values: jax.Array,
+            stamp: Optional[jax.Array] = None, *,
             sspec: ShardSpec) -> Tuple[SetState, jax.Array]:
     """Parallel recovery: every shard's classification scan + volatile-index
     rebuild runs in ONE vmapped dispatch (the Pallas ``recovery_scan``
     kernel batches over the shard axis).  Returns (stacked state, per-shard
     stage histogram i32[S, 5])."""
     fn = functools.partial(E.recover_impl, spec=sspec.shard_spec())
-    return _dispatch(jax.vmap(fn), sspec)(persisted, keys, values)
+    if stamp is None:
+        return _dispatch(jax.vmap(
+            lambda p, k, v: fn(p, k, v)), sspec)(persisted, keys, values)
+    return _dispatch(jax.vmap(fn), sspec)(persisted, keys, values, stamp)
+
+
+@functools.partial(jax.jit, static_argnames=("sspec",), donate_argnums=(0,))
+def hybrid_recover(snap: SetState, persisted: jax.Array, keys: jax.Array,
+                   values: jax.Array, stamp: jax.Array,
+                   delta_idx: jax.Array, *, sspec: ShardSpec) -> SetState:
+    """Per-shard snapshot + delta-log recovery in ONE vmapped dispatch:
+    every leading axis is the shard axis (``delta_idx`` is (S, D), padded
+    per shard with the shard capacity).  Bit-identical to :func:`recover`
+    on the same crash planes (DESIGN.md §11)."""
+    fn = functools.partial(E.hybrid_recover_impl, spec=sspec.shard_spec())
+    return _dispatch(jax.vmap(fn), sspec)(snap, persisted, keys, values,
+                                          stamp, delta_idx)
 
 
 def crash_and_recover(state: SetState, u: jax.Array, *, sspec: ShardSpec
@@ -743,6 +760,24 @@ class ShardedDurableMap(MetricsMixin):
                                             partial=partial)
         return budgets
 
+    def _pre_crash(self):
+        """Shared crash prologue: ABANDON the staged batch (stage-1 routed
+        but never dispatched -- it executed nothing and paid zero psyncs),
+        force every already-dispatched batch (their psyncs were issued
+        inside the jitted program: committed work), and fold the device
+        counters that the rebuild is about to reset."""
+        if self._staged is not None:
+            h, self._staged = self._staged, None
+            RT.release_plan(h._plan)
+            h._abandoned = True
+            self.pipeline_abandoned += 1
+            if self._m is not None:
+                self._m.counter(
+                    f"{self._m_name}.pipeline_abandoned").inc()
+        while self._pending:
+            self._force_oldest()
+        self._metrics_pre_recovery()          # counters are about to reset
+
     def crash_and_recover(self, u=None, seed: int = 0):
         """Crash all shards and rebuild in one vmapped recovery dispatch.
         ``u`` defaults to an INDEPENDENT uniform adversary per shard.
@@ -756,17 +791,7 @@ class ShardedDurableMap(MetricsMixin):
         the crash is applied -- exactly the crash-at-any-point semantics
         of the synchronous path.
         """
-        if self._staged is not None:
-            h, self._staged = self._staged, None
-            RT.release_plan(h._plan)
-            h._abandoned = True
-            self.pipeline_abandoned += 1
-            if self._m is not None:
-                self._m.counter(
-                    f"{self._m_name}.pipeline_abandoned").inc()
-        while self._pending:
-            self._force_oldest()
-        self._metrics_pre_recovery()          # counters are about to reset
+        self._pre_crash()
         if u is None:
             u = np.random.default_rng(seed).random(
                 self.state.cur.shape).astype(np.float32)
@@ -780,6 +805,109 @@ class ShardedDurableMap(MetricsMixin):
         self._overflow_warned = False         # fresh latch after the rebuild
         self._metrics_post_recovery(
             scanned_slots=self.n_shards * self.spec.capacity)
+        self._finish(None, 0)
+        return self
+
+    # --- snapshot + delta-log hybrid recovery (DESIGN.md §11) -----------
+    #
+    # Identical watermark discipline to ``DurableMap``, vectorized over the
+    # shard axis: the watermark is an (S,) epoch vector, the delta list an
+    # (S, D) grid padded per shard, and the recovery ONE vmapped dispatch.
+
+    _SNAP_FIELDS = E.DurableMap._SNAP_FIELDS
+
+    @property
+    def supports_hybrid(self) -> bool:
+        return E.supports_hybrid_recovery(self.spec)
+
+    def snapshot_capture(self) -> dict:
+        """Flush the pipeline to a clean dispatch boundary, host-copy the
+        stacked durable planes, and open a new stamp generation on every
+        shard.  Zero psyncs -- a pure NVM read (``cur == flushed`` holds
+        per shard at the boundary)."""
+        self.pipeline_flush()
+        cap = {
+            "watermark": np.asarray(self.state.epoch).copy(),   # (S,)
+            "raw_stage": np.asarray(self.state.flushed),
+            "keys": np.asarray(self.state.keys),
+            "values": np.asarray(self.state.values),
+            "stamp": np.asarray(self.state.stamp),
+        }
+        self.state = self.state._replace(epoch=self.state.epoch + 1)
+        return cap
+
+    def snapshot_build(self, cap: dict):
+        """Canonicalize the capture with the normal vmapped ``recover``
+        (background-thread safe).  Returns (planes, meta); every plane
+        keeps its leading shard axis."""
+        st, hist = recover(jnp.asarray(cap["raw_stage"]),
+                           jnp.asarray(cap["keys"]),
+                           jnp.asarray(cap["values"]),
+                           jnp.asarray(cap["stamp"]), sspec=self.sspec)
+        jax.block_until_ready(st.keys)
+        planes = {f: np.asarray(getattr(st, f)) for f in self._SNAP_FIELDS}
+        planes["raw_stage"] = cap["raw_stage"]
+        meta = {"kind": "sharded_map",
+                "watermark": cap["watermark"].tolist(),
+                "hist": np.asarray(hist).tolist()}
+        return planes, meta
+
+    def _snapshot_state(self, planes: dict) -> SetState:
+        cur = jnp.asarray(planes["cur"])
+        return make_state(self.sspec)._replace(
+            keys=jnp.asarray(planes["keys"]),
+            values=jnp.asarray(planes["values"]),
+            cur=cur, flushed=cur,
+            stamp=jnp.asarray(planes["stamp"]),
+            bkeys=jnp.asarray(planes["bkeys"]),
+            bids=jnp.asarray(planes["bids"]),
+            skeys=jnp.asarray(planes["skeys"]),
+            sids=jnp.asarray(planes["sids"]),
+            stash_n=jnp.asarray(planes["stash_n"]),
+            size=jnp.asarray(planes["size"]),
+            overflow=jnp.asarray(planes["overflow"]))
+
+    def hybrid_crash_and_recover(self, planes: dict, meta: dict, u=None,
+                                 seed: int = 0):
+        """Crash all shards and recover from the stored snapshot + each
+        shard's stamp delta in ONE vmapped dispatch; bit-identical to
+        ``crash_and_recover`` under the same adversary.  Staged-batch
+        abandonment follows the same rules.  Recovery psyncs: exactly 0."""
+        self._pre_crash()
+        if u is None:
+            u = np.random.default_rng(seed).random(
+                self.state.cur.shape).astype(np.float32)
+        n = self.spec.capacity
+        w = np.asarray(meta["watermark"], np.int32).reshape(-1, 1)
+        t0 = time.perf_counter()
+        crashed = crash(self.state, jnp.asarray(u))
+        mask = np.asarray(crashed[3]) > w                     # (S, N)
+        dmax = int(mask.sum(axis=1).max())
+        d = max(8, 1 << max(0, dmax - 1).bit_length())
+        delta_idx = np.full((self.n_shards, d), n, np.int32)
+        hist = np.asarray(meta["hist"], np.int64)             # (S, 5)
+        raw = planes["raw_stage"]
+        crash_stage = np.asarray(crashed[0])
+        n_delta = 0
+        for s in range(self.n_shards):
+            idx = np.flatnonzero(mask[s]).astype(np.int32)
+            delta_idx[s, :idx.size] = idx
+            n_delta += idx.size
+            hist[s] -= np.bincount(np.clip(raw[s, idx], 0, 4), minlength=5)
+            hist[s] += np.bincount(np.clip(crash_stage[s, idx], 0, 4),
+                                   minlength=5)
+        snap = self._snapshot_state(planes)
+        self.state = hybrid_recover(snap, *crashed,
+                                    jnp.asarray(delta_idx), sspec=self.sspec)
+        self.last_recovery_hist_shards = hist.astype(np.int32)
+        self.last_recovery_hist = self.last_recovery_hist_shards.sum(axis=0)
+        jax.block_until_ready(self.state.keys)
+        self.last_recovery_seconds = time.perf_counter() - t0
+        self._overflow_warned = False
+        total = self.n_shards * n
+        self._metrics_post_recovery(scanned_slots=n_delta,
+                                    from_snapshot=total - n_delta,
+                                    from_delta=n_delta)
         self._finish(None, 0)
         return self
 

@@ -330,7 +330,12 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=dflt.rate,
                     help="offered requests/sec (0 = auto-calibrate to "
                          "--utilization of measured closed-loop)")
-    ap.add_argument("--utilization", type=float, default=dflt.utilization)
+    ap.add_argument("--utilization", default=str(dflt.utilization),
+                    help="utilization target, or a comma-separated sweep "
+                         "(e.g. 0.6,0.75,0.9): each point runs its own "
+                         "open loop; the sweep + latency-throughput knee "
+                         "land under 'utilization_sweep' in --out while "
+                         "the first point stays the guarded payload")
     ap.add_argument("--batch", type=int, default=dflt.batch)
     ap.add_argument("--capacity", type=int, default=dflt.capacity)
     ap.add_argument("--key-range", type=int, default=dflt.key_range)
@@ -350,26 +355,72 @@ def main(argv=None):
                     help="CI smoke shape: 20s at a small geometry")
     args = ap.parse_args(argv)
 
+    try:
+        utils = [float(u) for u in str(args.utilization).split(",")
+                 if u.strip()]
+    except ValueError:
+        ap.error("--utilization must be a float or comma-separated floats")
+    if not utils:
+        ap.error("--utilization needs at least one value")
+    if len(utils) > 1 and args.rate > 0:
+        ap.error("a --utilization sweep requires --rate 0 (auto-calibrate "
+                 "each point)")
+
     kw = {f.name: getattr(args, f.name)
-          for f in dataclasses.fields(ServeConfig)}
+          for f in dataclasses.fields(ServeConfig)
+          if f.name != "utilization"}
     if args.quick:
         kw.update(duration=min(kw["duration"], 20.0), batch=256,
                   capacity=1 << 16, key_range=200_000,
                   queue_capacity=1024, shards=min(kw["shards"], 4))
-    cfg = ServeConfig(**kw)
 
-    payload = run_open_loop(cfg)
+    payloads = []
+    for u in utils:
+        cfg = ServeConfig(utilization=u, **kw)
+        p = run_open_loop(cfg)
+        payloads.append(p)
+        lat = p["latency"]
+        print(f"[u={u:.2f}] open-loop: {p['requests_completed']} requests "
+              f"in {p['duration_sec']:.1f}s "
+              f"({p['ops_per_sec']:.0f} ops/s at offered rate "
+              f"{p['offered_rate']:.0f}/s)")
+        print(f"[u={u:.2f}] latency ms: p50={lat['p50_ms']:.2f} "
+              f"p99={lat['p99_ms']:.2f} p999={lat['p999_ms']:.2f} "
+              f"(exact={lat['exact']})")
+        print(f"[u={u:.2f}] psync/op: {p['psync_per_op']}")
+        print(f"[u={u:.2f}] counters: {p['counters']}")
+
+    # The first point keeps the exact check_serve-guarded payload shape;
+    # a multi-point run rides the sweep + its knee alongside it.
+    payload = payloads[0]
+    if len(payloads) > 1:
+        sweep = [{
+            "utilization": u,
+            "offered_rate": p["offered_rate"],
+            "ops_per_sec": p["ops_per_sec"],
+            "p50_ms": p["latency"]["p50_ms"],
+            "p99_ms": p["latency"]["p99_ms"],
+            "p999_ms": p["latency"]["p999_ms"],
+            "backlog_peak": p["counters"]["backlog_peak"],
+            "backlog_end": p["counters"]["backlog_end"],
+        } for u, p in zip(utils, payloads)]
+        # latency-throughput knee: the highest utilization whose p99 stays
+        # within KNEE_FACTOR of the lowest-utilization p99 -- past it the
+        # open-loop queueing term dominates and the tail blows up.
+        KNEE_FACTOR = 3.0
+        base_p99 = sweep[0]["p99_ms"]
+        knee = sweep[0]
+        for pt in sorted(sweep, key=lambda s: s["utilization"]):
+            if pt["p99_ms"] <= KNEE_FACTOR * base_p99:
+                knee = pt
+        payload["utilization_sweep"] = sweep
+        payload["knee"] = {"factor_vs_lowest_p99": KNEE_FACTOR, **knee}
+        print(f"knee: u={knee['utilization']:.2f} at "
+              f"{knee['ops_per_sec']:.0f} ops/s, p99={knee['p99_ms']:.2f}ms "
+              f"(<= {KNEE_FACTOR:.0f}x the p99 at "
+              f"u={sweep[0]['utilization']:.2f})")
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)
-    lat = payload["latency"]
-    print(f"open-loop: {payload['requests_completed']} requests in "
-          f"{payload['duration_sec']:.1f}s "
-          f"({payload['ops_per_sec']:.0f} ops/s at offered rate "
-          f"{payload['offered_rate']:.0f}/s)")
-    print(f"latency ms: p50={lat['p50_ms']:.2f} p99={lat['p99_ms']:.2f} "
-          f"p999={lat['p999_ms']:.2f} (exact={lat['exact']})")
-    print(f"psync/op: {payload['psync_per_op']}")
-    print(f"counters: {payload['counters']}")
     print(f"wrote {args.out}")
     return 0
 

@@ -37,7 +37,9 @@ from __future__ import annotations
 
 import argparse
 import contextlib
+import os
 import sys
+import tempfile
 import time
 
 import jax
@@ -50,6 +52,7 @@ from repro.core import (DurableMap, DurableQueue, QueueSpec,
 from repro.models import model as M
 from repro.models.sharding import CPU_CTX
 from repro.obs import MetricsRegistry
+from repro.store.snapshot import Snapshotter, SnapshotPolicy
 from repro.train import steps as TS
 
 
@@ -95,6 +98,15 @@ def main(argv=None):
                          "commit (DESIGN.md §7)")
     ap.add_argument("--queue-capacity", type=int, default=1024,
                     help="ring slots per spine queue (power of two)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="background-snapshot the registry (and, with "
+                         "--queue, the spine queues) every N serving steps "
+                         "(DESIGN.md §11); --crash then recovers from the "
+                         "latest snapshot + the stamp delta instead of a "
+                         "full-pool scan.  0 disables")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="snapshot store directory (default: a fresh "
+                         "temp dir)")
     ap.add_argument("--pipeline", type=int, default=1,
                     help="registry pipeline depth (DESIGN.md §6): > 1 "
                          "serves the requests in WAVES through the "
@@ -141,6 +153,38 @@ def main(argv=None):
         qspec = QueueSpec(capacity=args.queue_capacity, mode="soft")
         req_q = DurableQueue(qspec, metrics=m, metrics_name="req_queue")
         resp_q = DurableQueue(qspec, metrics=m, metrics_name="resp_queue")
+
+    # background snapshotters (DESIGN.md §11): capture is a host copy of
+    # already-durable planes at the dispatch boundary, the build+save runs
+    # off the hot path -- the serving loop's psync bill is unchanged
+    snaps = {}
+    if args.snapshot_every > 0:
+        base = args.snapshot_dir or tempfile.mkdtemp(prefix="serve_snap_")
+        pol = SnapshotPolicy(every_steps=args.snapshot_every)
+        snaps["registry"] = Snapshotter(
+            registry, os.path.join(base, "registry"), pol)
+        if args.queue:
+            snaps["req_queue"] = Snapshotter(
+                req_q, os.path.join(base, "req_q"), pol)
+            snaps["resp_queue"] = Snapshotter(
+                resp_q, os.path.join(base, "resp_q"), pol)
+        print(f"snapshotter: every {args.snapshot_every} step(s) -> {base}")
+    serve_step = 0
+
+    def snapshot_tick():
+        nonlocal serve_step
+        serve_step += 1
+        for s in snaps.values():
+            s.maybe_snapshot(serve_step)
+
+    def crash_recover(structure, key):
+        """Crash+recover one structure -- through its snapshotter's
+        hybrid path when snapshots are on, the full-pool scan otherwise."""
+        if key in snaps:
+            snaps[key].wait()      # async build commits, as it would live
+            snaps[key].recover()
+        else:
+            structure.crash_and_recover()
 
     @contextlib.contextmanager
     def phase(name):
@@ -204,6 +248,7 @@ def main(argv=None):
             with phase("commit"):
                 _, committed = req_q.dequeue(b)
             assert committed.all()
+        snapshot_tick()
     else:
         # Depth-N pipelined waves (DESIGN.md §6): wave k generates on
         # device while the host runs wave k+1's durable ack and stage-1
@@ -240,6 +285,7 @@ def main(argv=None):
                 with phase("commit"):
                     _, committed = req_q.dequeue(len(ids))
                 assert np.asarray(committed).all()
+            snapshot_tick()
         dt = time.time() - t0
         print(f"served {b} requests x {args.gen} tokens in {len(waves)} "
               f"waves (depth-{args.pipeline} registry pipeline) in "
@@ -273,13 +319,20 @@ def main(argv=None):
             with phase("ack"):
                 acked = np.asarray(req_q.enqueue(late_ids))
             assert acked.all(), "admission queue full"
-        registry.crash_and_recover()
+        crash_recover(registry, "registry")
         done = np.array(registry.contains(req_ids))
         assert done.all()
         print(f"after crash+recovery: all {b} completions still registered")
+        if snaps:
+            g = m.snapshot()["gauges"]
+            print(f"hybrid recovery: "
+                  f"{int(g.get('registry.last_recovery_from_delta_slots', 0))}"
+                  f" delta slot(s) re-scanned, "
+                  f"{int(g.get('registry.last_recovery_from_snapshot_slots', 0))}"
+                  f" restored from the snapshot")
         if args.queue:
-            req_q.crash_and_recover()
-            resp_q.crash_and_recover()
+            crash_recover(req_q, "req_queue")
+            crash_recover(resp_q, "resp_queue")
             # no acknowledged request lost: each is in the registry or
             # still live in the recovered request queue
             vals, ok = resp_q.peek(b)
@@ -310,6 +363,8 @@ def main(argv=None):
                   f"req_queue={coll['req_queue']['recovery_psyncs']} "
                   f"resp_queue={coll['resp_queue']['recovery_psyncs']} "
                   f"(all zero by construction)")
+    for s in snaps.values():
+        s.close()
     return 0
 
 

@@ -225,13 +225,15 @@ class MetricsRegistry:
     def snapshot(self) -> dict:
         """One structured view of everything: host metrics + every
         collector's device-counter crossing.  THE force boundary at
-        which device telemetry becomes host-visible."""
+        which device telemetry becomes host-visible.  Collectors run
+        FIRST so gauges they refresh (e.g. snapshot age) read current."""
+        collected = {k: fn() for k, fn in self._collectors.items()}
         return {
             "counters": {k: c.value for k, c in self._counters.items()},
             "gauges": {k: g.value for k, g in self._gauges.items()},
             "histograms": {k: h.snapshot()
                            for k, h in self._hists.items()},
-            "collected": {k: fn() for k, fn in self._collectors.items()},
+            "collected": collected,
         }
 
     def reset_volatile(self) -> None:
