@@ -1,0 +1,185 @@
+"""Online-resharding benchmark: the S -> 2S split under live traffic ->
+``BENCH_resize.json``.
+
+Three numbers the CI floor guards (DESIGN.md §12):
+
+  split latency      wall-clock of a BLOCKING ``split()`` on a filled
+                     map (chunked copy + per-unit commit + frontier
+                     stamps, no interleaved traffic)
+  throughput dip     mixed ops/sec while a split migrates one increment
+                     per batch, as a fraction of the quiescent rate on
+                     the same geometry -- how much the migration steals
+                     from the hot path
+  psyncs/node        recovery-class bulk persists per migrated live
+                     node (``migration_psyncs / migrated_nodes``) --
+                     the chunked-copy amortization; per-op fencing
+                     during migration would show up here as ~1.0
+
+plus one EXACT conformance flag: over the whole migration window the
+hot path's psync count must equal the successful-update count to the
+last digit (``hot_psync_exact``) -- migration cost must ride the
+separate ``migration_psyncs`` ledger, never the SOFT per-op bill.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import Result, fmt_row
+from repro.core.engine import OP_CONTAINS, OP_INSERT, OP_REMOVE, SetSpec
+from repro.core.resize import ElasticShardedMap
+from repro.obs.meta import bench_meta
+
+OUT = "BENCH_resize.json"
+
+FILL = 0.40               # live fraction of capacity before the split
+READ_PCT = 70             # mixed-traffic read share, batches of unique keys
+
+
+def _mixed_batches(rng, key_range: int, batch: int, n: int):
+    """Mixed batches with UNIQUE keys per batch (per-key linearization
+    makes the psync-exactness bookkeeping trivially exact)."""
+    n_read = batch * READ_PCT // 100
+    n_ins = (batch - n_read) // 2
+    ops = np.concatenate([
+        np.full(n_read, OP_CONTAINS), np.full(n_ins, OP_INSERT),
+        np.full(batch - n_read - n_ins, OP_REMOVE)]).astype(np.int32)
+    out = []
+    for _ in range(n):
+        ks = rng.choice(key_range, batch, replace=False).astype(np.int32)
+        out.append((ops, ks))
+    return out
+
+
+def _fill(m: ElasticShardedMap, rng, key_range: int, n_live: int,
+          batch: int):
+    keys = rng.choice(key_range, n_live, replace=False).astype(np.int32)
+    for lo in range(0, n_live, batch):
+        chunk = np.resize(keys[lo:lo + batch], batch).astype(np.int32)
+        m.insert(chunk, chunk)
+
+
+def _drive(m: ElasticShardedMap, batches, migrate: bool = False):
+    """Run the traffic; with ``migrate``, ride one migration increment
+    per batch until the split completes (then stop).  Returns (seconds,
+    ops executed, hot psyncs paid, successful updates)."""
+    p0, o0, updates = m.psyncs, m.ops, 0
+    t0 = time.perf_counter()
+    i = 0
+    while True:
+        ops, ks = batches[i % len(batches)]
+        res = np.asarray(m.apply(ops, ks, ks))
+        updates += int(res[ops != OP_CONTAINS].sum())
+        i += 1
+        if migrate:
+            if m.step():
+                break
+        elif i >= len(batches):
+            break
+    dt = time.perf_counter() - t0
+    return dt, m.ops - o0, m.psyncs - p0, updates
+
+
+def _point(capacity: int, n_shards: int, batch: int, chunk: int,
+           rounds: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    key_range = capacity * 2
+    spec = SetSpec(capacity=capacity, backend="probe")
+
+    m = ElasticShardedMap(spec, n_shards=n_shards, migrate_chunk=chunk)
+    _fill(m, rng, key_range, int(capacity * FILL), batch)
+    batches = _mixed_batches(rng, key_range, batch, rounds)
+    m.precompile(batch, partial=True)
+    _drive(m, batches[:2])                       # warm both trace paths
+
+    # throwaway split to warm the migration traces (per-child rebuild,
+    # 2S dispatch): the timed runs below measure dispatch, not compile
+    m0 = ElasticShardedMap(spec, n_shards=n_shards, migrate_chunk=chunk)
+    _fill(m0, rng, key_range, int(capacity * FILL) // 4, batch)
+    m0.split()
+
+    # blocking split on a filled twin: the pure migration latency
+    m2 = ElasticShardedMap(spec, n_shards=n_shards, migrate_chunk=chunk)
+    _fill(m2, rng, key_range, int(capacity * FILL), batch)
+    m2.precompile(batch, partial=True)
+    t0 = time.perf_counter()
+    m2.split()
+    split_seconds = time.perf_counter() - t0
+    m2.precompile(batch, partial=True)           # warm the 2S traffic traces
+    _drive(m2, batches[:2])
+
+    # quiescent rate at the pre-split geometry
+    q_dt, q_ops, q_psync, q_upd = _drive(m, batches)
+    quiescent = q_ops / q_dt
+
+    # live split: one migration increment rides every traffic batch
+    m.begin_split()
+    m.precompile(batch, partial=True)            # warm the target's traces
+    mp0, mn0 = m.migration_psyncs, m.migrated_nodes
+    l_dt, l_ops, l_psync, l_upd = _drive(m, batches, migrate=True)
+    live = l_ops / l_dt
+    assert m.n_shards == 2 * n_shards and not m.migrating
+
+    migrated = m.migrated_nodes - mn0
+    return {
+        "capacity": capacity,
+        "n_shards": n_shards,
+        "batch": batch,
+        "migrate_chunk": chunk,
+        "split_seconds": split_seconds,
+        "quiescent_ops_per_sec": quiescent,
+        "live_ops_per_sec": live,
+        "live_throughput_frac": live / quiescent,
+        "migration_psyncs": m.migration_psyncs - mp0,
+        "migrated_nodes": migrated,
+        "psyncs_per_migrated_node":
+            (m.migration_psyncs - mp0) / max(1, migrated),
+        # EXACT: hot-path psyncs == successful updates, quiescent AND
+        # mid-migration -- migration cost never leaks into the SOFT bill
+        "hot_psync_exact": bool(q_psync == q_upd and l_psync == l_upd),
+        "live_batches": int(l_ops // batch),
+    }
+
+
+def run(quick: bool = False, out: str = OUT):
+    if quick:
+        points = [(1 << 13, 2, 256, 512, 12)]
+    else:
+        points = [(1 << 13, 2, 256, 512, 12), (1 << 15, 4, 512, 1024, 16)]
+    rows, results = [], {}
+    for capacity, s, batch, chunk, rounds in points:
+        r = _point(capacity, s, batch, chunk, rounds)
+        results[f"n{capacity}_s{s}"] = r
+        res = Result(ops_per_sec=r["live_ops_per_sec"], psync_per_op=0.0,
+                     psync_per_update=0.0, rounds=rounds)
+        rows.append(fmt_row(
+            f"resize_split_n{capacity}_s{s}", res,
+            {"split_s": f"{r['split_seconds']:.2f}",
+             "live_frac": f"{r['live_throughput_frac']:.2f}",
+             "psync_per_node": f"{r['psyncs_per_migrated_node']:.4f}",
+             "hot_exact": r["hot_psync_exact"]}))
+    head = results[max(results, key=lambda k: results[k]["capacity"])]
+    payload = {
+        "meta": bench_meta(),
+        "fill": FILL,
+        "read_pct": READ_PCT,
+        "results": results,
+        "headline": {
+            "capacity": head["capacity"],
+            "n_shards": head["n_shards"],
+            "split_seconds": head["split_seconds"],
+            "live_throughput_frac": head["live_throughput_frac"],
+            "psyncs_per_migrated_node": head["psyncs_per_migrated_node"],
+            "hot_psync_exact": head["hot_psync_exact"],
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    rows.append(f"bench_resize_json,0.000,path={out}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -42,10 +42,20 @@ floors in ``benchmarks/baseline_floor.json``:
     headline capacity, any point recovering non-bit-identically, or any
     nonzero recovery psyncs (both EXACT correctness bounds).
 
-Every payload may carry a ``meta`` block (git commit, jax version,
+  * online resharding (``BENCH_resize.json``, required whenever the floor
+    file carries ``resize_*`` keys): a full S -> 2S split slower than
+    ``resize_split_seconds_ceiling``, migration cost above
+    ``resize_psyncs_per_node_ceiling`` bulk persists per migrated node,
+    mixed-traffic throughput during the migration below
+    ``resize_min_live_throughput_frac`` of the quiescent-geometry rate,
+    or any hot-path psync-per-update deviation from the EXACT SOFT bound
+    during the migration (correctness, zero tolerance).
+
+Every payload MUST carry a ``meta`` block (git commit, jax version,
 schema version -- written by ``repro.obs.meta.bench_meta``); a missing
-block is TOLERATED (older artifacts stay checkable) but reported, so a
-regression can always be traced to its commit.
+block or a schema-version mismatch FAILS the guard
+(``repro.obs.meta.validate_meta``): grading a stale artifact against
+today's floors is itself a regression escape.
 
 The floor value is a conservative committed baseline, not the best
 measurement: CI machines vary, so the tolerance absorbs machine noise while
@@ -240,16 +250,60 @@ def check_recovery(bench: dict, floor: dict) -> list:
     return failures
 
 
-def report_meta(path: str, bench: dict) -> None:
-    """Tolerate-but-report provenance: a missing meta block never fails
-    the guard, but the log always says where each artifact came from."""
-    meta = bench.get("meta")
-    if meta is None:
-        print(f"note: {path} has no meta block (pre-provenance payload)")
-    else:
+def check_resize(bench: dict, floor: dict) -> list:
+    """Guard ``BENCH_resize.json``: the online S -> 2S split must finish
+    within the ceiling, bill a bounded number of recovery-class bulk
+    persists per migrated node, keep live mixed traffic above the
+    committed fraction of the quiescent rate, and leave the hot path's
+    psync-per-update bill EXACTLY at the SOFT bound while migrating."""
+    failures = []
+    head = bench.get("headline")
+    if not head:
+        return ["headline section missing from the resize benchmark "
+                "payload"]
+    key = "resize_split_seconds_ceiling"
+    if key in floor and head["split_seconds"] > floor[key]:
+        failures.append(
+            f"resize split took {head['split_seconds']:.2f}s > ceiling "
+            f"{floor[key]:.2f}s (S={head.get('n_shards')} -> "
+            f"{2 * head.get('n_shards', 0)})")
+    key = "resize_psyncs_per_node_ceiling"
+    if key in floor and head["psyncs_per_migrated_node"] > floor[key]:
+        failures.append(
+            f"resize migration cost {head['psyncs_per_migrated_node']:.3f} "
+            f"bulk persists / migrated node > ceiling {floor[key]:.3f} "
+            "(chunked copy no longer amortizing)")
+    key = "resize_min_live_throughput_frac"
+    if key in floor and head["live_throughput_frac"] < floor[key]:
+        failures.append(
+            f"throughput during migration fell to "
+            f"{head['live_throughput_frac']:.2f}x of the quiescent rate "
+            f"< floor {floor[key]:.2f}x (migration starves the hot path)")
+    if not head.get("hot_psync_exact", False):
+        failures.append(
+            "hot-path psync-per-update deviated from the exact SOFT bound "
+            "during the migration (correctness bug surfacing as perf)")
+    return failures
+
+
+def report_meta(path: str, bench: dict) -> list:
+    """Hard provenance gate (``repro.obs.meta.validate_meta``): a missing
+    or schema-mismatched meta block FAILS the guard; a valid one is
+    logged so every regression traces to its commit."""
+    try:
+        from repro.obs.meta import validate_meta
+    except ImportError:      # guard invoked without PYTHONPATH=src
+        import os
+        sys.path.insert(0, os.path.join(
+            os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+        from repro.obs.meta import validate_meta
+    failures = validate_meta(bench, path)
+    if not failures:
+        meta = bench["meta"]
         print(f"{path}: commit={meta.get('git_commit', '?')[:12]} "
               f"jax={meta.get('jax_version', '?')} "
               f"schema=v{meta.get('schema_version', '?')}")
+    return failures
 
 
 def main() -> int:
@@ -258,14 +312,15 @@ def main() -> int:
     ap.add_argument("--bench-queue", default="BENCH_queue.json")
     ap.add_argument("--bench-serve", default="BENCH_serve.json")
     ap.add_argument("--bench-recovery", default="BENCH_recovery.json")
+    ap.add_argument("--bench-resize", default="BENCH_resize.json")
     ap.add_argument("--floor", default="benchmarks/baseline_floor.json")
     args = ap.parse_args()
     with open(args.bench) as f:
         bench = json.load(f)
     with open(args.floor) as f:
         floor = json.load(f)
-    report_meta(args.bench, bench)
-    failures = check(bench, floor)
+    failures = report_meta(args.bench, bench)
+    failures += check(bench, floor)
     if any(k.startswith("queue_") for k in floor):
         try:
             with open(args.bench_queue) as f:
@@ -276,7 +331,7 @@ def main() -> int:
                 f"floor file has queue_* keys but {args.bench_queue} is "
                 "missing (was bench_queue run?)")
         if qbench is not None:
-            report_meta(args.bench_queue, qbench)
+            failures += report_meta(args.bench_queue, qbench)
             failures += check_queue(qbench, floor)
     if any(k.startswith("serve_") for k in floor):
         try:
@@ -288,7 +343,7 @@ def main() -> int:
                 f"floor file has serve_* keys but {args.bench_serve} is "
                 "missing (was bench_serve run?)")
         if sbench is not None:
-            report_meta(args.bench_serve, sbench)
+            failures += report_meta(args.bench_serve, sbench)
             failures += check_serve(sbench, floor)
     if any(k.startswith("recovery_") for k in floor):
         try:
@@ -300,8 +355,20 @@ def main() -> int:
                 f"floor file has recovery_* keys but {args.bench_recovery} "
                 "is missing (was bench_recovery run?)")
         if rbench is not None:
-            report_meta(args.bench_recovery, rbench)
+            failures += report_meta(args.bench_recovery, rbench)
             failures += check_recovery(rbench, floor)
+    if any(k.startswith("resize_") for k in floor):
+        try:
+            with open(args.bench_resize) as f:
+                zbench = json.load(f)
+        except OSError:
+            zbench = None
+            failures.append(
+                f"floor file has resize_* keys but {args.bench_resize} "
+                "is missing (was bench_resize run?)")
+        if zbench is not None:
+            failures += report_meta(args.bench_resize, zbench)
+            failures += check_resize(zbench, floor)
     for msg in failures:
         print(f"PERF REGRESSION: {msg}", file=sys.stderr)
     if not failures:

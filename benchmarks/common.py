@@ -144,8 +144,8 @@ def run_sharded_workload(mode: str, backend: str, n_shards: int,
         keys = rng.choice(key_range, key_range // 2, replace=False)
         for i in range(0, len(keys), batch):
             chunk = np.resize(keys[i:i + batch], batch).astype(np.int32)
-            state, _, _, _ = SH.dispatch_batch(state, ins, chunk, chunk,
-                                               sspec=sspec)
+            state, _, _, _, _ = SH.dispatch_batch(state, ins, chunk, chunk,
+                                                  sspec=sspec)
 
     ops = _mixed_ops(batch, read_pct)
     n_upd = int(np.sum(np.asarray(ops) != OP_CONTAINS))

@@ -38,7 +38,7 @@ def main() -> None:
     from benchmarks import (scalability, key_range, read_pct,
                             psync_counts, recovery, checkpoint_bench,
                             bench_hash, bench_shard, bench_queue,
-                            bench_serve, bench_recovery)
+                            bench_serve, bench_recovery, bench_resize)
     suites = {
         "psync_counts": psync_counts,    # paper's analytical bound first
         "bench_hash": bench_hash,        # canonical point -> BENCH_hash.json
@@ -46,6 +46,7 @@ def main() -> None:
         "bench_queue": bench_queue,      # durable queue -> BENCH_queue.json
         "bench_serve": bench_serve,      # open-loop tails -> BENCH_serve.json
         "bench_recovery": bench_recovery,  # hybrid -> BENCH_recovery.json
+        "bench_resize": bench_resize,    # online split -> BENCH_resize.json
         "scalability": scalability,      # Fig 1
         "key_range": key_range,          # Fig 2
         "read_pct": read_pct,            # Fig 3

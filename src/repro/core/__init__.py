@@ -17,4 +17,7 @@ from repro.core.shard import (ShardSpec, ShardedDurableMap, shard_of,
 from repro.core.router import (PLACEMENTS, adaptive_lane_budget,
                                budget_candidates, np_storage_rows)
 from repro.core.queue import QueueSpec, QueueState, DurableQueue
+from repro.core.resize import (ElasticShardedMap, MigrationFrontier,
+                               ResizeCapacityError, split_planes,
+                               merge_planes, reshard_planes)
 from repro.core.oracle import OracleSet, OracleQueue

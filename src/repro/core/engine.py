@@ -461,7 +461,15 @@ def recover_impl(persisted: jax.Array, keys: jax.Array, values: jax.Array,
                  stamp: Optional[jax.Array] = None,
                  *, spec: SetSpec) -> Tuple[SetState, jax.Array]:
     """Unjitted recovery body (vmappable -- the shard runtime rebuilds all
-    shards' volatile indexes in one vmapped dispatch)."""
+    shards' volatile indexes in one vmapped dispatch).
+
+    The overflow latch is RECOMPUTED here, never carried: the rebuilt
+    state starts from a fresh ``make_state`` and ``state.overflow`` is
+    re-derived from the rebuilt index alone (table build / init_index),
+    so a spurious pre-crash latch does not survive a rebuild that no
+    longer overflows, and a rebuild that DOES overflow latches anew.
+    Facades pair this with ``MetricsMixin._post_recovery_overflow`` to
+    re-arm the one-shot warning on the same boundary."""
     backend = get_backend(spec.backend)
     member, hist = backend.recover_scan(spec, persisted)
     nb, w, s = backend.state_geometry(spec)
@@ -663,6 +671,32 @@ def hybrid_recover(snap: SetState, persisted: jax.Array, keys: jax.Array,
                                delta_idx, spec=spec)
 
 
+def export_pool(state: SetState) -> dict:
+    """Host copies of the DURABLE node-pool planes at a dispatch boundary
+    (``cur == flushed`` holds there): the exact NVM content a migration,
+    resharding, or snapshot reads.  Zero psyncs -- a pure read of already
+    persisted planes.  Works on a per-shard state or a stacked (S, N)
+    sharded state alike (the planes keep their leading axes)."""
+    return {"stage": np.asarray(state.flushed),
+            "keys": np.asarray(state.keys),
+            "values": np.asarray(state.values),
+            "stamp": np.asarray(state.stamp)}
+
+
+def import_pool(planes: dict, *, spec: SetSpec) -> Tuple[SetState, jax.Array]:
+    """Recovery-class bulk rebuild of ONE shard from raw pool planes (the
+    :func:`export_pool` layout): classification scan + volatile-index
+    build, exactly like crash recovery -- and like it, ZERO psyncs (the
+    payloads being imported are already durable; only the destination
+    bulk-persist of a migration pays, and that is accounted host-side by
+    the caller as a recovery-class bulk persist, never per-op fences).
+    Returns ``(state, stage histogram i32[5])``."""
+    return recover(jnp.asarray(planes["stage"], jnp.int32),
+                   jnp.asarray(planes["keys"], jnp.int32),
+                   jnp.asarray(planes["values"], jnp.int32),
+                   jnp.asarray(planes["stamp"], jnp.int32), spec=spec)
+
+
 def pad_delta(idx: np.ndarray, capacity: int) -> np.ndarray:
     """Pad a host-side delta slot list to a power-of-two length >= 8 with
     ``capacity`` (the OOB-drop sentinel), so the gathered classification
@@ -775,6 +809,20 @@ class MetricsMixin:
             self.last_recovery_seconds)
         self._m_bridge.mark_reset(psync=self.psyncs, op=self.ops)
 
+    def _recheck_overflow(self):
+        """Subclass hook: run the facade's one-shot overflow check."""
+        self._check_overflow()
+
+    def _post_recovery_overflow(self):
+        """Recovery epilogue shared by EVERY recovery path (full, hybrid,
+        elastic): the rebuild recomputed ``state.overflow`` from the
+        rebuilt index (``recover_impl``), so the one-shot warning must be
+        re-armed in the same breath -- a genuine post-recovery overflow
+        warns again, a spurious pre-crash latch is gone, and a rebuild
+        that still overflows warns immediately on the FRESH latch."""
+        self._overflow_warned = False
+        self._recheck_overflow()
+
 
 class DurableMap(MetricsMixin):
     """Object API over the engine (single-controller usage).
@@ -863,9 +911,8 @@ class DurableMap(MetricsMixin):
         self.last_recovery_hist = np.asarray(hist)
         jax.block_until_ready(self.state.keys)    # honest recovery timing
         self.last_recovery_seconds = time.perf_counter() - t0
-        self._overflow_warned = False    # fresh latch after the rebuild
         self._metrics_post_recovery(scanned_slots=self.spec.capacity)
-        self._check_overflow()
+        self._post_recovery_overflow()   # latch recomputed; warning re-armed
         return self
 
     # --- snapshot + delta-log hybrid recovery (DESIGN.md §11) -----------
@@ -963,11 +1010,10 @@ class DurableMap(MetricsMixin):
         self.last_recovery_hist = hist.astype(np.int32)
         jax.block_until_ready(self.state.keys)
         self.last_recovery_seconds = time.perf_counter() - t0
-        self._overflow_warned = False
         self._metrics_post_recovery(scanned_slots=int(delta.size),
                                     from_snapshot=n - int(delta.size),
                                     from_delta=int(delta.size))
-        self._check_overflow()
+        self._post_recovery_overflow()
         return self
 
     @property

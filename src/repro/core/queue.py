@@ -488,9 +488,8 @@ class DurableQueue(MetricsMixin):
         self.last_recovery_hist = np.asarray(hist)
         jax.block_until_ready(self.state.vals)
         self.last_recovery_seconds = time.perf_counter() - t0
-        self._overflow_warned = False     # fresh latch after the rebuild
         self._metrics_post_recovery(scanned_slots=self.spec.capacity)
-        self._check_overflow()
+        self._post_recovery_overflow()    # latch recomputed; warning re-armed
         return self
 
     # --- snapshot + delta-log hybrid recovery (DESIGN.md §11) -----------
@@ -567,11 +566,10 @@ class DurableQueue(MetricsMixin):
         self.last_recovery_hist = hist.astype(np.int32)
         jax.block_until_ready(self.state.vals)
         self.last_recovery_seconds = time.perf_counter() - t0
-        self._overflow_warned = False
         self._metrics_post_recovery(scanned_slots=int(delta.size),
                                     from_snapshot=n - int(delta.size),
                                     from_delta=int(delta.size))
-        self._check_overflow()
+        self._post_recovery_overflow()
         return self
 
     @property

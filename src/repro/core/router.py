@@ -484,7 +484,10 @@ def _apply_v2(state, d_ops: jax.Array, d_keys: jax.Array,
     """Device-local mixed-op dispatch: per device, stage-2 route the (Bd,)
     sub-batch into the (S/D, L) local grid and execute the local shards
     in one vmapped ``apply_batch_impl``.  Returns (stacked state,
-    (D, Bd) results, (D,) per-device dropped counts)."""
+    (D, Bd) results, (D,) per-device dropped counts, (D, Bd) per-lane
+    kept mask -- False exactly for the real lanes stage 2 dropped past a
+    ``max_lane_budget`` cap, so callers can retry/reshard instead of
+    reading a dropped lane as a successful no-op)."""
     spec = sspec.shard_spec()
 
     def group_fn(st, o, k, v):
@@ -492,7 +495,8 @@ def _apply_v2(state, d_ops: jax.Array, d_keys: jax.Array,
             o, k, v, sspec=sspec, n_groups=groups, lane_budget=lane_budget)
         fn = functools.partial(E.apply_batch_impl, spec=spec)
         st, r_res = jax.vmap(fn)(st, r_ops, r_keys, r_vals)
-        return st, _grid_gather(r_res, slot, False), dropped
+        kept = (slot >= 0) | (o == OP_NOP)
+        return st, _grid_gather(r_res, slot, False), dropped, kept
 
     return _group_dispatch(group_fn, state,
                            (d_ops, d_keys, d_vals), sspec=sspec,
@@ -519,7 +523,8 @@ def _get_v2(state, d_keys: jax.Array, d_active: jax.Array, *, sspec,
                 st, r_keys, r_ops == OP_CONTAINS)
         vals = _grid_gather(r_vals, slot, jnp.int32(default))
         pres = _grid_gather(r_pres, slot, False)
-        return st, vals, pres, dropped
+        kept = (slot >= 0) | ~act
+        return st, vals, pres, dropped, kept
 
     return _group_dispatch(group_fn, state, (d_keys, d_active),
                            sspec=sspec, groups=groups)
@@ -545,8 +550,12 @@ class InFlight:
     stage-1 :class:`RoutePlan` needed to invert them.  ``force()``
     performs the (only) host sync, returns the per-lane numpy results,
     and recycles the plan's scratch set.  ``kind`` is "apply"
-    (``force() -> (results bool[B], dropped)``) or "get"
-    (``force() -> (values i32[B], present bool[B], dropped)``).
+    (``force() -> (results bool[B], dropped, drop_mask bool[B])``) or
+    "get" (``force() -> (values i32[B], present bool[B], dropped,
+    drop_mask bool[B])``).  ``drop_mask[i]`` is True exactly when real
+    lane i was shed past a ``max_lane_budget`` cap -- its result is NOT
+    a successful no-op and the caller must retry or reshard (all-False
+    on every drop-free trace; OP_NOP padding is never "dropped").
     """
     __slots__ = ("kind", "plan", "outs", "default", "_forced")
 
@@ -566,21 +575,25 @@ class InFlight:
             plan = self.plan
             if self.kind == "apply":
                 if self.outs is None:
-                    self._forced = (np.zeros((0,), bool), 0)
+                    self._forced = (np.zeros((0,), bool), 0,
+                                    np.zeros((0,), bool))
                 else:
-                    res, dropped = self.outs
+                    res, dropped, kept = self.outs
                     self._forced = (host_gather(res, plan.slot, False),
-                                    int(np.asarray(dropped).sum()))
+                                    int(np.asarray(dropped).sum()),
+                                    ~host_gather(kept, plan.slot, True))
             else:
                 if self.outs is None:
                     self._forced = (np.zeros((0,), np.int32),
-                                    np.zeros((0,), bool), 0)
+                                    np.zeros((0,), bool), 0,
+                                    np.zeros((0,), bool))
                 else:
-                    vals, pres, dropped = self.outs
+                    vals, pres, dropped, kept = self.outs
                     self._forced = (
                         host_gather(vals, plan.slot, np.int32(self.default)),
                         host_gather(pres, plan.slot, False),
-                        int(np.asarray(dropped).sum()))
+                        int(np.asarray(dropped).sum()),
+                        ~host_gather(kept, plan.slot, True))
             self.outs = None
             _POOL.release(plan.scratch)
         return self._forced
@@ -596,16 +609,16 @@ def dispatch_plan(state, plan: RoutePlan, *, sspec, kind: str = "apply",
         return state, InFlight(kind, plan._replace(scratch=None), None,
                                default)
     if kind == "apply":
-        state, res, dropped = _apply_v2(
+        state, res, dropped, kept = _apply_v2(
             state, jnp.asarray(plan.d_ops), jnp.asarray(plan.d_keys),
             jnp.asarray(plan.d_vals), sspec=sspec, groups=plan.groups,
             lane_budget=plan.lane_budget)
-        return state, InFlight(kind, plan, (res, dropped))
-    state, vals, pres, dropped = _get_v2(
+        return state, InFlight(kind, plan, (res, dropped, kept))
+    state, vals, pres, dropped, kept = _get_v2(
         state, jnp.asarray(plan.d_keys),
         jnp.asarray(plan.d_ops) == OP_CONTAINS, sspec=sspec,
         groups=plan.groups, lane_budget=plan.lane_budget, default=default)
-    return state, InFlight(kind, plan, (vals, pres, dropped), default)
+    return state, InFlight(kind, plan, (vals, pres, dropped, kept), default)
 
 
 def apply_batch_v2_async(state, ops, keys, values, *, sspec):
@@ -627,20 +640,20 @@ def get_v2_async(state, keys, *, sspec, default: int = 0):
 
 def apply_batch_v2(state, ops, keys, values, *, sspec):
     """Two-stage routed mixed-op batch.  Returns ``(state, results
-    bool[B] (numpy), dropped int, plan RoutePlan)``.  Linearization and
-    psync accounting are bit-identical to the v1 single-stage router
-    (same lanes, same per-shard order)."""
+    bool[B] (numpy), dropped int, drop_mask bool[B], plan RoutePlan)``.
+    Linearization and psync accounting are bit-identical to the v1
+    single-stage router (same lanes, same per-shard order)."""
     state, fl = apply_batch_v2_async(state, ops, keys, values, sspec=sspec)
-    out, dropped = fl.force()
-    return state, out, dropped, fl.plan
+    out, dropped, drop_mask = fl.force()
+    return state, out, dropped, drop_mask, fl.plan
 
 
 def get_v2(state, keys, *, sspec, default: int = 0):
     """Two-stage routed value lookup.  Returns ``(state, values i32[B],
-    present bool[B], dropped int, plan)``."""
+    present bool[B], dropped int, drop_mask bool[B], plan)``."""
     state, fl = get_v2_async(state, keys, sspec=sspec, default=default)
-    out_v, out_p, dropped = fl.force()
-    return state, out_v, out_p, dropped, fl.plan
+    out_v, out_p, dropped, drop_mask = fl.force()
+    return state, out_v, out_p, dropped, drop_mask, fl.plan
 
 
 def precompile(state, batch: int, *, sspec, partial=None):
@@ -684,9 +697,9 @@ def precompile(state, batch: int, *, sspec, partial=None):
         nop = jnp.full((d, bd), OP_NOP, jnp.int32)
         zero = jnp.zeros((d, bd), jnp.int32)
         for lane in bds[bd]:
-            state, _, _ = _apply_v2(state, nop, zero, zero, sspec=sspec,
-                                    groups=d, lane_budget=lane)
-            state, _, _, _ = _get_v2(state, zero, nop == OP_CONTAINS,
-                                     sspec=sspec, groups=d,
-                                     lane_budget=lane, default=0)
+            state, _, _, _ = _apply_v2(state, nop, zero, zero, sspec=sspec,
+                                       groups=d, lane_budget=lane)
+            state, _, _, _, _ = _get_v2(state, zero, nop == OP_CONTAINS,
+                                        sspec=sspec, groups=d,
+                                        lane_budget=lane, default=0)
     return state, budgets

@@ -160,6 +160,10 @@ class ShardSpec:
         if self.pipeline_depth < 1:
             raise ValueError("pipeline_depth must be >= 1, got "
                              f"{self.pipeline_depth}")
+        if self.base.capacity < self.n_shards:
+            raise ValueError(
+                f"base.capacity ({self.base.capacity}) must be >= n_shards "
+                f"({self.n_shards}): every shard needs at least one slot")
         if self.router == "v1":
             # fail loudly instead of silently ignoring v2-only knobs
             for knob, neutral in (("placement", "contiguous"),
@@ -171,10 +175,53 @@ class ShardSpec:
                         f"{knob} is a v2-only knob; the v1 router ignores "
                         f"it (got {knob}={getattr(self, knob)!r})")
 
+    @property
+    def per_shard_capacity(self) -> int:
+        """Per-shard node-pool capacity.  An even split keeps the exact
+        quotient; a non-divisible total rounds the ceil quotient UP to
+        the next power of two -- the invariant-preserving value (probe
+        tables, bucket counts, and the resize engine's positional
+        migration all assume pow2-friendly per-shard pools), never a
+        silent truncation.  ``effective_capacity`` surfaces the total
+        actually provisioned."""
+        per, rem = divmod(self.base.capacity, self.n_shards)
+        if rem == 0:
+            return per
+        return 1 << max(0, per).bit_length()
+
+    @property
+    def effective_capacity(self) -> int:
+        """TOTAL capacity actually provisioned: ``per_shard_capacity *
+        n_shards``.  Equals ``base.capacity`` exactly when the split is
+        even; otherwise the rounded-up total (>= ``base.capacity``),
+        surfaced here instead of silently exceeding the request."""
+        return self.per_shard_capacity * self.n_shards
+
     def shard_spec(self) -> SetSpec:
-        """The per-shard SetSpec: total capacity split evenly (ceil)."""
-        cap = -(-self.base.capacity // self.n_shards)
-        return dataclasses.replace(self.base, capacity=cap)
+        """The per-shard SetSpec (``capacity == per_shard_capacity``)."""
+        return dataclasses.replace(self.base,
+                                   capacity=self.per_shard_capacity)
+
+    def with_n_shards(self, n_shards: int) -> "ShardSpec":
+        """The same per-shard geometry at a different shard count: the
+        total capacity scales so every shard keeps ``per_shard_capacity``
+        slots -- the invariant the positional split/merge migration of
+        :mod:`repro.core.resize` relies on (child slot i is parent slot
+        i, so per-shard pools must not change size across a resize)."""
+        return dataclasses.replace(
+            self, n_shards=n_shards,
+            base=dataclasses.replace(
+                self.base, capacity=self.per_shard_capacity * n_shards))
+
+    def split_spec(self) -> "ShardSpec":
+        """Child geometry of an S -> 2S split (per-shard capacity kept)."""
+        return self.with_n_shards(self.n_shards * 2)
+
+    def merge_spec(self) -> "ShardSpec":
+        """Parent geometry of a 2S -> S merge (per-shard capacity kept)."""
+        if self.n_shards < 2:
+            raise ValueError("cannot merge below one shard")
+        return self.with_n_shards(self.n_shards // 2)
 
     def lane_budget(self, batch: int) -> int:
         """Per-shard lane slots L for a B-lane batch (static: B is a trace-
@@ -256,6 +303,23 @@ def gather(grid: jax.Array, slot: jax.Array, fill) -> jax.Array:
     flat = grid.reshape(-1)
     got = flat[jnp.clip(slot, 0, flat.shape[0] - 1)]
     return jnp.where(slot >= 0, got, fill)
+
+
+def np_v1_drop_mask(keys: np.ndarray, *, n_shards: int, lane_budget: int
+                    ) -> np.ndarray:
+    """Host twin of the v1 :func:`route` drop decision: True per lane iff
+    its rank within its shard segment is past the budget.  Purely
+    positional (v1 routes OP_NOP lanes like any other), so the mask sum
+    equals the jitted ``dropped`` count exactly."""
+    keys = np.asarray(keys, np.int32)
+    b = keys.shape[0]
+    sid = np_shard_of(keys, n_shards)
+    order = np.argsort(sid, kind="stable")
+    seg0 = np.searchsorted(sid[order], np.arange(n_shards))
+    pos = np.arange(b) - seg0[sid[order]]
+    mask = np.zeros((b,), bool)
+    mask[order] = pos >= lane_budget
+    return mask
 
 
 # ---------------------------------------------------------------------------
@@ -363,33 +427,46 @@ def get(state: SetState, keys: jax.Array, *, sspec: ShardSpec,
 
 
 def dispatch_batch(state: SetState, ops, keys, values, *, sspec: ShardSpec
-                   ) -> Tuple[SetState, jax.Array, int, Optional[
-                       RT.RoutePlan]]:
+                   ) -> Tuple[SetState, jax.Array, int, np.ndarray,
+                              Optional[RT.RoutePlan]]:
     """Route + execute a mixed batch through the spec's router.  Returns
-    ``(state, per-lane results, dropped count, stage-1 plan-or-None)``.
+    ``(state, per-lane results, dropped count, per-lane drop mask,
+    stage-1 plan-or-None)``.  ``drop_mask[i]`` is True exactly when lane
+    i was shed past the lane budget -- its result is NOT a successful
+    no-op; callers retry or reshard (all-False on drop-free traces).
     The v2 path runs stage 1 host-side (no all-gather under shard_map)
     and picks the adaptive lane budget; v1 is the single-stage global
     router.  Results/state/psyncs are bit-identical between the two
     (``tests/test_router_v2.py``)."""
     if sspec.router == "v1":
+        b = np.asarray(keys).shape[0]
         state, res, dropped = apply_batch(
             state, jnp.asarray(ops, jnp.int32), jnp.asarray(keys, jnp.int32),
             jnp.asarray(values, jnp.int32), sspec=sspec)
-        return state, res, int(dropped), None
-    state, res, dropped, plan = RT.apply_batch_v2(state, ops, keys, values,
-                                                  sspec=sspec)
-    return state, res, dropped, plan
+        d = int(dropped)
+        mask = np_v1_drop_mask(
+            keys, n_shards=sspec.n_shards,
+            lane_budget=sspec.lane_budget(b)) if d else np.zeros((b,), bool)
+        return state, res, d, mask, None
+    state, res, dropped, drop_mask, plan = RT.apply_batch_v2(
+        state, ops, keys, values, sspec=sspec)
+    return state, res, dropped, drop_mask, plan
 
 
 def dispatch_get(state: SetState, keys, *, sspec: ShardSpec,
                  default: int = 0):
     """Value lookup through the spec's router; returns ``(state, values,
-    present, dropped, plan-or-None)``."""
+    present, dropped, drop_mask, plan-or-None)``."""
     if sspec.router == "v1":
+        b = np.asarray(keys).shape[0]
         state, vals, present, dropped = get(
             state, jnp.asarray(keys, jnp.int32), sspec=sspec,
             default=default)
-        return state, vals, present, int(dropped), None
+        d = int(dropped)
+        mask = np_v1_drop_mask(
+            keys, n_shards=sspec.n_shards,
+            lane_budget=sspec.lane_budget(b)) if d else np.zeros((b,), bool)
+        return state, vals, present, d, mask, None
     return RT.get_v2(state, keys, sspec=sspec, default=default)
 
 
@@ -457,7 +534,8 @@ class _LazyBatch:
     handle raises ``RuntimeError``.
     """
     __slots__ = ("_owner", "_kind", "_plan", "_default", "_inflight",
-                 "_value", "_present", "_dropped", "_abandoned")
+                 "_value", "_present", "_dropped", "_drop_mask",
+                 "_abandoned")
 
     def __init__(self, owner, kind: str, plan, default: int = 0):
         self._owner = owner
@@ -468,6 +546,7 @@ class _LazyBatch:
         self._value = None
         self._present = None
         self._dropped = None
+        self._drop_mask = None
         self._abandoned = False
 
     @property
@@ -495,6 +574,14 @@ class _LazyBatch:
         """Router-dropped lane count for this batch (forces)."""
         self.value()
         return self._dropped
+
+    @property
+    def drop_mask(self) -> np.ndarray:
+        """Per-lane drop mask for this batch (forces): True exactly for
+        the lanes shed past a ``max_lane_budget`` cap, whose results are
+        NOT successful no-ops -- retry or reshard them."""
+        self.value()
+        return self._drop_mask
 
     def __array__(self, dtype=None, copy=None):
         v = np.asarray(self.value())
@@ -562,6 +649,7 @@ class ShardedDurableMap(MetricsMixin):
         self.last_recovery_hist_shards = None  # i32[S, 5]
         self.router_dropped = 0
         self.last_route = None                # v2: stage-1 RoutePlan
+        self.last_drop_mask = None            # bool[B] of the last batch
         self.pipeline_abandoned = 0           # staged batches lost to crash
         self._staged = None                   # routed, not yet dispatched
         self._pending = []                    # dispatched, not yet forced
@@ -587,7 +675,10 @@ class ShardedDurableMap(MetricsMixin):
         self._dispatch_staged()
         return bool(self.state.overflow.any())
 
-    def _finish(self, res, dropped, check_overflow: bool = True):
+    def _finish(self, res, dropped, drop_mask=None,
+                check_overflow: bool = True):
+        if drop_mask is not None:
+            self.last_drop_mask = drop_mask
         d = int(dropped)
         if d:
             self.router_dropped += d
@@ -606,11 +697,16 @@ class ShardedDurableMap(MetricsMixin):
         # to pipeline_flush() instead of checking per forced batch
         if check_overflow and not self._overflow_warned and self.overflowed:
             self._overflow_warned = True
-            E.warn_structure(
-                f"ShardedDurableMap index overflow latched on a shard "
-                f"(spec={self.spec}); lookups may miss live keys -- grow "
-                "capacity, stash_size, or n_shards", stacklevel=4)
+            E.warn_structure(self._overflow_message(), stacklevel=4)
         return res
+
+    def _overflow_message(self) -> str:
+        """Warning text for the one-shot overflow latch.  A wrapping
+        facade (ElasticShardedMap) rebinds this per instance so the
+        warning names the remedy the wrapper actually offers."""
+        return (f"ShardedDurableMap index overflow latched on a shard "
+                f"(spec={self.spec}); lookups may miss live keys -- grow "
+                "capacity, stash_size, or n_shards")
 
     # -- double-buffered pipeline (pipeline_depth > 1) ---------------------
     #
@@ -653,10 +749,11 @@ class ShardedDurableMap(MetricsMixin):
         h = self._pending.pop(0)
         out = h._inflight.force()
         if h._kind == "apply":
-            h._value, h._dropped = out
+            h._value, h._dropped, h._drop_mask = out
         else:
-            h._value, h._present, h._dropped = out
-        self._finish(h._value, h._dropped, check_overflow=False)
+            h._value, h._present, h._dropped, h._drop_mask = out
+        self._finish(h._value, h._dropped, h._drop_mask,
+                     check_overflow=False)
 
     def _force_through(self, handle):
         """Force the pipeline, in submit order, through ``handle``."""
@@ -686,6 +783,11 @@ class ShardedDurableMap(MetricsMixin):
         in-flight count -- nothing leaks (tests/test_obs.py)."""
         return RT.scratch_stats()
 
+    def _recheck_overflow(self):
+        # the sharded overflow check lives in _finish (it also services
+        # the deferred pipelined-path check)
+        self._finish(None, 0)
+
     def _metrics_extra(self) -> dict:
         route = None
         if self.last_route is not None:
@@ -705,11 +807,11 @@ class ShardedDurableMap(MetricsMixin):
     def _apply(self, ops, keys, values):
         if self.sspec.pipeline_depth > 1:
             return self._submit("apply", ops, keys, values)
-        self.state, res, dropped, plan = dispatch_batch(
+        self.state, res, dropped, drop_mask, plan = dispatch_batch(
             self.state, ops, keys, values, sspec=self.sspec)
         if plan is not None:
             self.last_route = plan
-        return self._finish(res, dropped)
+        return self._finish(res, dropped, drop_mask)
 
     def insert(self, keys, values=None):
         keys = np.asarray(keys, np.int32)
@@ -731,12 +833,12 @@ class ShardedDurableMap(MetricsMixin):
         """Values for present keys, ``default`` otherwise."""
         if self.sspec.pipeline_depth > 1:
             return self._submit("get", None, keys, None, default)
-        self.state, vals, _, dropped, plan = dispatch_get(
+        self.state, vals, _, dropped, drop_mask, plan = dispatch_get(
             self.state, np.asarray(keys, np.int32), sspec=self.sspec,
             default=default)
         if plan is not None:
             self.last_route = plan
-        return self._finish(vals, dropped)
+        return self._finish(vals, dropped, drop_mask)
 
     def apply(self, ops, keys, values=None):
         """Mixed contains/insert/remove batch; see :func:`apply_batch`."""
@@ -802,10 +904,9 @@ class ShardedDurableMap(MetricsMixin):
         self.last_recovery_hist = self.last_recovery_hist_shards.sum(axis=0)
         jax.block_until_ready(self.state.keys)    # honest recovery timing
         self.last_recovery_seconds = time.perf_counter() - t0
-        self._overflow_warned = False         # fresh latch after the rebuild
         self._metrics_post_recovery(
             scanned_slots=self.n_shards * self.spec.capacity)
-        self._finish(None, 0)
+        self._post_recovery_overflow()    # latch recomputed; warning re-armed
         return self
 
     # --- snapshot + delta-log hybrid recovery (DESIGN.md §11) -----------
@@ -903,12 +1004,11 @@ class ShardedDurableMap(MetricsMixin):
         self.last_recovery_hist = self.last_recovery_hist_shards.sum(axis=0)
         jax.block_until_ready(self.state.keys)
         self.last_recovery_seconds = time.perf_counter() - t0
-        self._overflow_warned = False
         total = self.n_shards * n
         self._metrics_post_recovery(scanned_slots=n_delta,
                                     from_snapshot=total - n_delta,
                                     from_delta=n_delta)
-        self._finish(None, 0)
+        self._post_recovery_overflow()
         return self
 
     @property

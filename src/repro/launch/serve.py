@@ -47,8 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import (DurableMap, DurableQueue, QueueSpec,
-                        ShardedDurableMap, SetSpec)
+from repro.core import (DurableMap, DurableQueue, ElasticShardedMap,
+                        QueueSpec, ShardedDurableMap, SetSpec)
 from repro.models import model as M
 from repro.models.sharding import CPU_CTX
 from repro.obs import MetricsRegistry
@@ -107,6 +107,14 @@ def main(argv=None):
     ap.add_argument("--snapshot-dir", default=None,
                     help="snapshot store directory (default: a fresh "
                          "temp dir)")
+    ap.add_argument("--autosplit", type=float, default=0.0,
+                    help="fill-factor watermark in (0, 1]: the registry "
+                         "becomes an ElasticShardedMap and an online "
+                         "S -> 2S shard split (DESIGN.md §12) starts when "
+                         "live size / capacity crosses the watermark; the "
+                         "migration advances one increment per serving "
+                         "step, interleaved with live traffic.  0 "
+                         "disables (fixed geometry)")
     ap.add_argument("--pipeline", type=int, default=1,
                     help="registry pipeline depth (DESIGN.md §6): > 1 "
                          "serves the requests in WAVES through the "
@@ -120,6 +128,12 @@ def main(argv=None):
     if args.pipeline > 1 and args.shards <= 1:
         ap.error("--pipeline > 1 requires --shards > 1 (the pipelined "
                  "dispatch path lives in the sharded registry router)")
+    if args.autosplit:
+        if not 0 < args.autosplit <= 1:
+            ap.error("--autosplit must be a fill factor in (0, 1]")
+        if args.router != "v2" or args.pipeline != 1:
+            ap.error("--autosplit requires --router v2 and --pipeline 1 "
+                     "(the split frontier commits at dispatch boundaries)")
 
     cfg = get_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -129,7 +143,17 @@ def main(argv=None):
 
     m = MetricsRegistry()     # one snapshot() reaches every structure
     spec = SetSpec(capacity=1024, mode="soft", backend=args.backend)
-    if args.shards > 1:       # same façade API, hash-partitioned runtime
+    if args.autosplit:        # elastic geometry: splits online under load
+        registry = ElasticShardedMap(spec, n_shards=max(1, args.shards),
+                                     placement=args.placement,
+                                     max_lane_budget=args.max_lane_budget,
+                                     metrics=m, metrics_name="registry")
+        budgets = registry.precompile(args.requests)
+        if budgets:
+            print(f"registry router v2: pre-compiled lane budgets "
+                  f"{budgets} (elastic, autosplit @ fill "
+                  f">= {args.autosplit})")
+    elif args.shards > 1:     # same façade API, hash-partitioned runtime
         registry = ShardedDurableMap(spec, n_shards=args.shards,
                                      router=args.router,
                                      placement=args.placement,
@@ -176,6 +200,16 @@ def main(argv=None):
         serve_step += 1
         for s in snaps.values():
             s.maybe_snapshot(serve_step)
+        if args.autosplit:
+            # the autosplit watermark: one migration increment rides each
+            # serving step, so the split amortizes across live traffic
+            if registry.migrating:
+                registry.step()
+            elif registry.fill_factor() >= args.autosplit:
+                print(f"autosplit: fill {registry.fill_factor():.3f} >= "
+                      f"{args.autosplit:g} -> online split "
+                      f"S={registry.n_shards} -> {2 * registry.n_shards}")
+                registry.begin_split()
 
     def crash_recover(structure, key):
         """Crash+recover one structure -- through its snapshotter's
@@ -309,6 +343,15 @@ def main(argv=None):
         lr = reg["last_route"]
         print(f"router: lane_budget={lr['lane_budget']} "
               f"groups={lr['groups']} dropped={reg['router_dropped']}")
+    if args.autosplit:
+        while not registry.step():      # drain an in-flight migration
+            pass
+        print(f"elastic registry: n_shards={registry.n_shards} "
+              f"(splits={registry.splits}), fill="
+              f"{registry.fill_factor():.3f}, migrated="
+              f"{registry.migrated_nodes} node(s) at "
+              f"{registry.migration_psyncs} migration psync(s); hot-path "
+              f"psyncs={registry.psyncs} (== #requests, unchanged)")
 
     if args.crash:
         late_ids = None

@@ -248,3 +248,83 @@ class Snapshotter:
             #       teardown still must release the pool and the store
         self._pool.shutdown()
         self.store.close()
+
+
+# ---------------------------------------------------------------------------
+# Elastic restore: rebuild a sharded map from a snapshot taken at a
+# DIFFERENT shard count (DESIGN.md §12).
+# ---------------------------------------------------------------------------
+
+
+def load_resharded(directory: str, spec, n_shards: int, elastic: bool = True,
+                   **shard_kwargs):
+    """Restore the latest committed sharded-map snapshot into a map with
+    ``n_shards`` shards -- not necessarily the count the snapshot was
+    taken at.  The stored CANONICAL planes (``cur``/``keys``/``values``/
+    ``stamp`` -- exactly what a full-pool rebuild at the old S would
+    produce; the raw pre-canonicalization stage plane is deliberately not
+    used) are resharded host-side by prefix refinement
+    (:func:`repro.core.resize.reshard_planes`) and rebuilt with the
+    normal vmapped recovery at the new geometry: zero psyncs, and the
+    result is bit-identical to recovering at the old S and then running
+    a full offline split/merge.
+
+    ``spec`` is the per-shard-compatible base :class:`SetSpec` (snapshots
+    store planes, not specs); the per-shard pool size must match the
+    stored one -- resharding moves nodes ACROSS shards, never resizes a
+    shard's pool.  Returns an :class:`~repro.core.resize.ElasticShardedMap`
+    (``elastic=False``: a plain :class:`ShardedDurableMap`)."""
+    import jax
+    from repro.core import shard as SH
+    from repro.core.resize import ElasticShardedMap, reshard_planes
+
+    store = CheckpointManager(directory, layout="dirs")
+    try:
+        step = store.latest_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"no committed snapshot under {directory!r}")
+        planes = store.restore(step)
+        canon = {"stage": np.asarray(planes["cur"]),
+                 "keys": np.asarray(planes["keys"]),
+                 "values": np.asarray(planes["values"]),
+                 "stamp": np.asarray(planes["stamp"])}
+        s_old, per = canon["stage"].shape
+        if elastic:
+            m = ElasticShardedMap(spec, n_shards=n_shards, **shard_kwargs)
+            inner = m.map
+        else:
+            m = SH.ShardedDurableMap(spec, n_shards=n_shards, **shard_kwargs)
+            inner = m
+        if inner.sspec.per_shard_capacity != per:
+            raise ValueError(
+                f"per-shard capacity mismatch: snapshot has {per}-slot "
+                f"pools, target spec provisions "
+                f"{inner.sspec.per_shard_capacity} -- resharding moves "
+                "nodes across shards, it cannot resize a shard's pool")
+        out = reshard_planes(canon, s_old, n_shards)
+        state, hist = SH.recover(
+            jnp.asarray(out["stage"]), jnp.asarray(out["keys"]),
+            jnp.asarray(out["values"]), jnp.asarray(out["stamp"]),
+            sspec=inner.sspec)
+        # stamp strictly above every stored watermark (see _fix_epoch):
+        # the watermark vector is per OLD shard, so after resharding the
+        # safe bound is the global max
+        w = None
+        for s in store.committed:
+            extra = store.extra(s)
+            if extra and "watermark" in extra:
+                ws = int(np.max(np.asarray(extra["watermark"])))
+                w = ws if w is None else max(w, ws)
+        if w is not None:
+            state = state._replace(
+                epoch=jnp.maximum(state.epoch, jnp.int32(w + 1)))
+        jax.block_until_ready(state.keys)
+        inner.state = state
+        inner.last_recovery_hist_shards = np.asarray(hist)
+        inner.last_recovery_hist = np.asarray(hist).sum(axis=0)
+        if elastic:
+            m.last_recovery_hist = inner.last_recovery_hist
+        return m
+    finally:
+        store.close()

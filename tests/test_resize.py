@@ -1,0 +1,536 @@
+"""Online S -> 2S resharding (DESIGN.md §12) + the PR-10 bugfix surface.
+
+Pins the acceptance criteria:
+
+  * a quiescent online ``split()`` ends BIT-IDENTICAL (every state leaf)
+    to the offline rebuild: ``split_planes`` on the exported pool +
+    one vmapped recovery at 2S;
+  * a split under live mixed traffic ends content-identical (membership
+    AND values) to a sequential reference, and the merge path round-trips;
+  * crash-at-every-frontier-step adversary: zero lost committed ops and
+    zero recovery psyncs at every step of both a split and a merge;
+  * hot-path psync accounting stays EXACT through a migration window
+    (psyncs == successful updates; migration rides its own ledger);
+  * ``begin_merge`` refuses (``ResizeCapacityError``) instead of
+    silently dropping when the merged geometry cannot hold both siblings;
+  * elastic snapshot restore: a snapshot taken at S restores at 2S / S/2;
+
+plus the satellite regressions: the overflow latch is recomputed from
+the rebuilt index across recovery (never carried stale) and its one-shot
+warning re-arms, for every facade; capacity accounting is conformant
+across S x backend (ceil-split rounds UP to an invariant-preserving
+per-shard pool, surfaced via ``effective_capacity``, never truncated);
+and router lane drops are visible per-lane via ``last_drop_mask`` on
+both router generations.
+"""
+import contextlib
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (DurableMap, DurableQueue, ElasticShardedMap,
+                        QueueSpec, ResizeCapacityError, SetSpec,
+                        ShardedDurableMap, ShardSpec, OP_CONTAINS,
+                        OP_INSERT, OP_REMOVE, merge_planes, np_shard_of,
+                        reshard_planes, split_planes)
+from repro.core import engine as E
+from repro.core import shard as SH
+from repro.core.resize import merge_pair
+from repro.store.snapshot import Snapshotter, load_resharded
+
+BACKENDS = ("probe", "scan", "bucket")
+
+
+def _assert_states_equal(got, want, skip=("n_psync", "n_ops")):
+    for f, a, b in zip(got._fields, got, want):
+        if f in skip:
+            continue
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"field {f} diverged")
+
+
+def _mixed_unique(rng, key_range, batch, read_pct=50):
+    """Mixed batch over UNIQUE keys (batch order is then irrelevant to the
+    engine's phase-order linearization, so a dict reference is exact)."""
+    n_read = batch * read_pct // 100
+    n_ins = (batch - n_read) // 2
+    ops = np.concatenate([
+        np.full(n_read, OP_CONTAINS), np.full(n_ins, OP_INSERT),
+        np.full(batch - n_read - n_ins, OP_REMOVE)]).astype(np.int32)
+    ks = rng.choice(key_range, batch, replace=False).astype(np.int32)
+    return ops, ks
+
+
+def _ref_apply(ref, ops, ks, vals):
+    for o, k, v in zip(ops, ks, vals):
+        if o == OP_INSERT:
+            ref.setdefault(int(k), int(v))
+        elif o == OP_REMOVE:
+            ref.pop(int(k), None)
+
+
+def _check_content(m, ref, key_range):
+    allk = np.arange(key_range, dtype=np.int32)
+    got = np.asarray(m.get(allk, default=-1))
+    want = np.array([ref.get(int(k), -1) for k in allk])
+    np.testing.assert_array_equal(got, want)
+    assert len(m) == len(ref)
+
+
+# ---------------------------------------------------------------------------
+# Plane-level resharding: the shared positional-migration spec
+# ---------------------------------------------------------------------------
+
+
+def test_split_merge_planes_roundtrip():
+    rng = np.random.default_rng(0)
+    s, n = 4, 64
+    keys = rng.choice(1 << 20, (s, n), replace=False).astype(np.int32)
+    member = rng.random((s, n)) < 0.5
+    planes = {"stage": np.where(member, E.VALID, E.FREE).astype(np.int32),
+              "keys": np.where(member, keys, 0).astype(np.int32),
+              "values": (keys * 3).astype(np.int32) * member,
+              "stamp": rng.integers(0, 9, (s, n)).astype(np.int32)}
+    # keys must actually live in their owning shard for the roundtrip
+    sid = np_shard_of(planes["keys"].reshape(-1), s).reshape(s, n)
+    ok = member & (sid == np.arange(s)[:, None])
+    for p in planes.values():
+        p *= ok
+    planes["stage"] = np.where(ok, E.VALID, E.FREE).astype(np.int32)
+
+    out = split_planes(planes, s)
+    assert out["stage"].shape == (2 * s, n)
+    # child id refines the parent prefix: every live key lands in its shard
+    csid = np_shard_of(out["keys"].reshape(-1), 2 * s).reshape(2 * s, n)
+    live = out["stage"] == E.VALID
+    assert (csid[live] == np.nonzero(live)[0]).all()
+    # split is positional: child slot i mirrors parent slot i
+    for c in (0, 1):
+        keep = live[c::2]
+        np.testing.assert_array_equal(out["keys"][c::2][keep],
+                                      planes["keys"][keep])
+    back = merge_planes(out, 2 * s)
+    live_in = planes["stage"] == E.VALID
+    got = {(int(k), int(v)) for k, v in
+           zip(back["keys"][back["stage"] == E.VALID],
+               back["values"][back["stage"] == E.VALID])}
+    want = {(int(k), int(v)) for k, v in
+            zip(planes["keys"][live_in], planes["values"][live_in])}
+    assert got == want
+    # reshard_planes composes the two and validates pow2 geometry
+    np.testing.assert_array_equal(
+        reshard_planes(planes, s, 2 * s)["keys"], out["keys"])
+    with pytest.raises(ValueError):
+        reshard_planes(planes, s, 3)
+
+
+def test_merge_pair_overflow_raises():
+    n = 8
+    full = {"stage": np.full(n, E.VALID, np.int32),
+            "keys": np.arange(1, n + 1, dtype=np.int32),
+            "values": np.arange(1, n + 1, dtype=np.int32),
+            "stamp": np.zeros(n, np.int32)}
+    with pytest.raises(ResizeCapacityError):
+        merge_pair(dict(full), dict(full))
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: quiescent split == offline rebuild, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_quiescent_split_bit_identical_to_offline(backend):
+    rng = np.random.default_rng(1)
+    m = ElasticShardedMap(SetSpec(capacity=512, backend=backend),
+                          n_shards=2, migrate_chunk=64)
+    keys = rng.choice(4096, 200, replace=False).astype(np.int32)
+    m.insert(keys, keys * 7)
+    m.remove(keys[:40])
+    p0 = m.psyncs
+
+    planes = E.export_pool(m.map.state)          # durable pool, pre-split
+    m.split()
+
+    # hot-path psyncs unchanged to the last digit by a quiescent split
+    assert m.psyncs == p0
+    assert m.n_shards == 4 and not m.migrating
+
+    off_state, off_hist = SH.recover(
+        jnp.asarray(split_planes(planes, 2)["stage"]),
+        jnp.asarray(split_planes(planes, 2)["keys"]),
+        jnp.asarray(split_planes(planes, 2)["values"]),
+        jnp.asarray(split_planes(planes, 2)["stamp"]),
+        sspec=m.sspec)
+    _assert_states_equal(m.map.state, off_state)
+    got = np.asarray(m.get(keys, default=-1))
+    want = np.where(np.isin(keys, keys[:40]), -1, keys * 7)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: split and merge under live mixed traffic
+# ---------------------------------------------------------------------------
+
+
+def test_live_split_content_identical():
+    rng = np.random.default_rng(2)
+    kr = 4096
+    m = ElasticShardedMap(SetSpec(capacity=1024, backend="probe"),
+                          n_shards=2, migrate_chunk=128)
+    ref = {}
+    for _ in range(4):
+        ops, ks = _mixed_unique(rng, kr, 128)
+        m.apply(ops, ks, ks * 2)
+        _ref_apply(ref, ops, ks, ks * 2)
+
+    m.begin_split()
+    batches = 0
+    while not m.step():                      # one increment rides each batch
+        ops, ks = _mixed_unique(rng, kr, 64)
+        m.apply(ops, ks, ks * 2)
+        _ref_apply(ref, ops, ks, ks * 2)
+        batches += 1
+    assert m.n_shards == 4 and m.splits == 1 and batches > 1
+    assert m.migrated_nodes > 0 and m.migration_psyncs > 0
+    _check_content(m, ref, kr)
+
+    # merge straight back under read/remove-only traffic (the merged
+    # geometry must hold both siblings, so no new keys mid-merge)
+    m.begin_merge()
+    while not m.step():
+        ops, ks = _mixed_unique(rng, kr, 64)
+        ops = np.where(ops == OP_INSERT, OP_CONTAINS, ops).astype(np.int32)
+        m.apply(ops, ks, ks * 2)
+        _ref_apply(ref, ops, ks, ks * 2)
+    assert m.n_shards == 2 and m.merges == 1 and not m.overflowed
+    _check_content(m, ref, kr)
+
+
+def test_begin_merge_capacity_refusal():
+    m = ElasticShardedMap(SetSpec(capacity=256, backend="probe"),
+                          n_shards=2, migrate_chunk=64)
+    keys = np.arange(1, 201, dtype=np.int32)
+    m.insert(keys, keys)                     # 200 live > 128 per merged shard
+    with pytest.raises(ResizeCapacityError):
+        m.begin_merge()
+    assert not m.migrating and m.n_shards == 2     # refused, not started
+    assert len(m) == 200                           # and nothing was dropped
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: crash-at-every-frontier-step adversary
+# ---------------------------------------------------------------------------
+
+
+def _crash_every_frontier_step(m, want_content, key_range, seed0=100):
+    """Crash + recover at EVERY frontier state (plus once mid-copy inside
+    every unit): committed content must survive each crash and recovery
+    must pay zero psyncs.  A crash discards the open unit's volatile
+    copy buffers -- the unit restarts at the frontier by design -- so
+    between crashes the adversary allows at most ONE unit of redo (an
+    adversary crashing inside every chunk forever would deny progress to
+    any scheme whose recovery redoes bounded work; the correctness claim
+    is zero lost COMMITTED ops at every crash point, which this checks)."""
+    allk = np.arange(key_range, dtype=np.int32)
+
+    def check(tag):
+        m.crash_and_recover(seed=seed0 + check.n)
+        check.n += 1
+        assert m.psyncs == 0, f"recovery paid psyncs at {tag}"
+        got = np.asarray(m.get(allk, default=-1))
+        np.testing.assert_array_equal(got, want_content,
+                                      err_msg=f"lost ops at {tag}")
+    check.n = 0
+
+    frontiers = 0
+    while True:
+        check(f"frontier={m.frontier.committed}")   # crash at the boundary
+        frontiers += 1
+        if m.step():                                # reopen + first chunk
+            return frontiers
+        check("mid-copy")                           # crash on a partial copy
+        f0 = m.frontier.committed
+        while m.frontier.committed == f0:           # redo + commit the unit
+            if m.step():
+                return frontiers
+
+
+def test_crash_at_every_split_step():
+    rng = np.random.default_rng(3)
+    kr = 2048
+    m = ElasticShardedMap(SetSpec(capacity=256, backend="probe"),
+                          n_shards=2, migrate_chunk=64)
+    keys = rng.choice(kr, 90, replace=False).astype(np.int32)
+    m.insert(keys, keys * 5)
+    ref = {int(k): int(k) * 5 for k in keys}
+    want = np.array([ref.get(int(k), -1) for k in
+                     np.arange(kr, dtype=np.int32)])
+
+    m.begin_split()
+    m.crash_and_recover(seed=99)                   # crash before any step
+    assert m.psyncs == 0
+    steps = _crash_every_frontier_step(m, want, kr)
+    assert steps >= 2                              # at least one per parent
+    assert m.n_shards == 4 and not m.migrating
+    _check_content(m, ref, kr)
+    # and the map still takes writes after surviving the gauntlet
+    assert bool(np.asarray(m.insert([kr + 1], [7]))[0])
+
+
+def test_crash_at_every_merge_step():
+    rng = np.random.default_rng(4)
+    kr = 2048
+    m = ElasticShardedMap(SetSpec(capacity=256, backend="probe"),
+                          n_shards=2, migrate_chunk=64)
+    keys = rng.choice(kr, 60, replace=False).astype(np.int32)
+    m.insert(keys, keys * 3)
+    m.split()
+    assert m.n_shards == 4
+    ref = {int(k): int(k) * 3 for k in keys}
+    want = np.array([ref.get(int(k), -1) for k in
+                     np.arange(kr, dtype=np.int32)])
+
+    m.begin_merge()
+    steps = _crash_every_frontier_step(m, want, kr, seed0=500)
+    assert steps >= 1                              # one per sibling pair
+    assert m.n_shards == 2 and not m.migrating
+    _check_content(m, ref, kr)
+
+
+# ---------------------------------------------------------------------------
+# Psync accounting: exact through the migration window
+# ---------------------------------------------------------------------------
+
+
+def test_hot_psyncs_exact_during_migration():
+    rng = np.random.default_rng(5)
+    kr = 4096
+    m = ElasticShardedMap(SetSpec(capacity=1024, backend="probe"),
+                          n_shards=2, migrate_chunk=128)
+    keys = rng.choice(kr, 300, replace=False).astype(np.int32)
+    m.insert(keys, keys)
+    p0, mp0 = m.psyncs, m.migration_psyncs
+    updates = 0
+
+    m.begin_split()
+    while not m.step():
+        ops, ks = _mixed_unique(rng, kr, 64)
+        res = np.asarray(m.apply(ops, ks, ks))
+        updates += int(res[ops != OP_CONTAINS].sum())
+    # SOFT bound to the last digit: 1 psync per successful update, and the
+    # migration's bulk persists all landed on the separate ledger
+    assert m.psyncs - p0 == updates
+    assert m.migration_psyncs - mp0 > 0
+    # reads during a later migration stay free too
+    m.begin_merge()
+    p1 = m.psyncs
+    while not m.step():
+        m.contains(rng.choice(kr, 32, replace=False).astype(np.int32))
+        m.get(rng.choice(kr, 32, replace=False).astype(np.int32))
+    assert m.psyncs == p1
+
+
+def test_elastic_facade_constraints():
+    spec = SetSpec(capacity=256, backend="probe")
+    with pytest.raises(ValueError):
+        ElasticShardedMap(spec, n_shards=2, router="v1")
+    with pytest.raises(ValueError):
+        ElasticShardedMap(spec, n_shards=2, pipeline_depth=2)
+    m = ElasticShardedMap(spec, n_shards=2)
+    assert m.step() is True                        # idle step is a no-op
+    m.begin_split()
+    with pytest.raises(RuntimeError):
+        m.begin_merge()                            # one migration at a time
+
+
+# ---------------------------------------------------------------------------
+# Elastic snapshot restore: old-S snapshot -> new-S map
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("new_s", [1, 4])
+def test_snapshot_restores_into_different_shard_count(tmp_path, new_s):
+    rng = np.random.default_rng(6)
+    base = SetSpec(capacity=512, backend="bucket")
+    m = ShardedDurableMap(ShardSpec(base=base, n_shards=2))
+    keys = rng.choice(4096, 150, replace=False).astype(np.int32)
+    m.insert(keys, keys * 9)
+    m.remove(keys[:30])
+    sn = Snapshotter(m, str(tmp_path / "snap"))
+    sn.snapshot()
+    sn.wait()
+    sn.close()
+
+    # resharding moves nodes across shards but never resizes a pool: the
+    # snapshot stored 256-slot per-shard pools (512/2), so the target spec
+    # must provision 256 * new_s total
+    tgt = SetSpec(capacity=256 * new_s, backend="bucket")
+    m2 = load_resharded(str(tmp_path / "snap"), tgt, new_s)
+    assert isinstance(m2, ElasticShardedMap) and m2.n_shards == new_s
+    assert m2.psyncs == 0                          # restore pays no psyncs
+    got = np.asarray(m2.get(keys, default=-1))
+    want = np.where(np.isin(keys, keys[:30]), -1, keys * 9)
+    np.testing.assert_array_equal(got, want)
+    assert len(m2) == 120
+    # restored map keeps its SOFT discipline: epoch was raised above every
+    # stored watermark, so new updates stamp past the snapshot
+    assert bool(np.asarray(m2.insert([4097], [1]))[0])
+    m2.crash_and_recover(seed=7)
+    assert bool(np.asarray(m2.contains([4097]))[0])
+
+    plain = load_resharded(str(tmp_path / "snap"), tgt, new_s,
+                           elastic=False)
+    assert isinstance(plain, ShardedDurableMap)
+    np.testing.assert_array_equal(np.asarray(plain.get(keys, default=-1)),
+                                  want)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the overflow latch is recomputed across recovery
+# ---------------------------------------------------------------------------
+
+
+def _force_overflow(m, start=1, total=512, quiet=True):
+    """Insert past capacity until the latch fires (warns once); returns
+    the keys attempted so the caller can drain them."""
+    k = np.arange(start, start + total, dtype=np.int32)
+    ctx = warnings.catch_warnings() if quiet else contextlib.nullcontext()
+    with ctx:
+        if quiet:
+            warnings.simplefilter("ignore")
+        for lo in range(0, len(k), 64):
+            m.insert(k[lo:lo + 64])
+            if m.overflowed:
+                return k
+    raise AssertionError("latch never fired")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_overflow_latch_recomputed_across_recovery(backend):
+    m = DurableMap(SetSpec(capacity=64, backend=backend))
+    tried = _force_overflow(m)
+    assert m.overflowed and m._overflow_warned
+    # drain well below capacity: the REBUILT index no longer overflows,
+    # so recovery must not carry the stale latch...
+    for lo in range(0, len(tried), 64):
+        m.remove(tried[lo:lo + 64])
+    m.crash_and_recover(jnp.zeros((64,), jnp.float32))
+    assert not m.overflowed
+    assert not m._overflow_warned              # ...and the warning re-arms
+    with pytest.warns(RuntimeWarning, match="overflow"):
+        _force_overflow(m, start=1000, quiet=False)   # a fresh overflow warns
+
+
+def test_sharded_overflow_latch_recomputed_across_recovery():
+    m = ShardedDurableMap(SetSpec(capacity=128, backend="probe"),
+                          n_shards=2)
+    tried = _force_overflow(m, total=1024)
+    assert m.overflowed and m._overflow_warned
+    for lo in range(0, len(tried), 64):
+        m.remove(tried[lo:lo + 64])
+    m.crash_and_recover(u=np.zeros((2, 64), np.float32))
+    assert not m.overflowed and not m._overflow_warned
+
+
+def test_queue_overflow_latch_recomputed_across_recovery():
+    q = DurableQueue(QueueSpec(capacity=8))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        q.enqueue(np.arange(1, 13, dtype=np.int32))    # 4 rejected
+    assert q.overflowed and q._overflow_warned
+    q.dequeue(4)
+    q.crash_and_recover()
+    assert not q.overflowed                    # ring has room again
+    assert not q._overflow_warned
+    assert list(np.asarray(q.dequeue(4)[0])) == [5, 6, 7, 8]
+
+
+def test_elastic_overflow_suggests_split():
+    m = ElasticShardedMap(SetSpec(capacity=64, backend="probe"), n_shards=2)
+    with pytest.warns(RuntimeWarning, match="begin_split"):
+        m.insert(np.arange(1, 129, dtype=np.int32))
+    assert m.overflowed
+    assert 0.0 < m.fill_factor() <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: capacity-accounting conformance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_shards", (1, 2, 8))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_capacity_accounting_conformance(backend, n_shards):
+    sspec = ShardSpec(base=SetSpec(capacity=1024, backend=backend),
+                      n_shards=n_shards)
+    per = sspec.per_shard_capacity
+    assert per == 1024 // n_shards                 # even split: exact
+    assert sspec.effective_capacity == 1024
+    assert sspec.shard_spec().capacity == per
+    # a non-divisible total rounds UP to a pow2 per-shard pool -- the
+    # provisioned total is surfaced, never silently truncated below
+    odd = ShardSpec(base=SetSpec(capacity=1001, backend=backend),
+                    n_shards=n_shards)
+    assert odd.effective_capacity >= 1001
+    assert odd.per_shard_capacity * n_shards == odd.effective_capacity
+    if n_shards > 1:
+        p = odd.per_shard_capacity
+        assert p & (p - 1) == 0                    # invariant-preserving
+    # the split/merge specs preserve the per-shard pool exactly (resize
+    # moves nodes ACROSS shards, never resizes a pool)
+    assert sspec.split_spec().per_shard_capacity == per
+    assert sspec.split_spec().n_shards == 2 * n_shards
+    if n_shards > 1:
+        assert sspec.merge_spec().per_shard_capacity == per
+        assert sspec.merge_spec().n_shards == n_shards // 2
+    # the map the spec builds really provisions the surfaced total
+    if backend == "probe":
+        m = ShardedDurableMap(odd)
+        assert m.state.keys.shape == (n_shards, odd.per_shard_capacity)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: per-lane drop visibility on both routers
+# ---------------------------------------------------------------------------
+
+
+def test_v2_lane_budget_drops_visible_per_lane():
+    m = ShardedDurableMap(SetSpec(capacity=256, backend="probe"),
+                          n_shards=2, max_lane_budget=4, min_lane_budget=4)
+    # every key in one shard: the budget must drop the excess VISIBLY
+    pool = np.arange(1, 4096, dtype=np.int32)
+    one = pool[np_shard_of(pool, 2) == 0][:16]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        ok = np.asarray(m.insert(one, one))
+    mask = m.last_drop_mask
+    assert mask is not None and mask.shape == one.shape
+    assert int(mask.sum()) == m.router_dropped > 0
+    assert not ok[mask].any()                  # dropped lanes report False
+    assert ok[~mask].all()                     # surviving lanes landed
+    # query in budget-sized chunks (B <= min_lane_budget never drops):
+    # exactly the surviving lanes are present
+    got = np.concatenate([np.asarray(m.contains(one[i:i + 4]))
+                          for i in range(0, len(one), 4)])
+    np.testing.assert_array_equal(got, ~mask)
+
+
+def test_v1_drop_mask_matches_dropped_count():
+    m = ShardedDurableMap(SetSpec(capacity=256, backend="probe"),
+                          n_shards=2, router="v1", lane_factor=1,
+                          min_lane_budget=4)
+    pool = np.arange(1, 4096, dtype=np.int32)
+    one = pool[np_shard_of(pool, 2) == 0][:16]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        ok = np.asarray(m.insert(one, one))
+    mask = m.last_drop_mask
+    assert mask is not None and int(mask.sum()) == m.router_dropped > 0
+    assert not ok[mask].any()
+    got = np.concatenate([np.asarray(m.contains(one[i:i + 4]))
+                          for i in range(0, len(one), 4)])
+    np.testing.assert_array_equal(got, ~mask)

@@ -167,8 +167,17 @@ def test_shard_spec_validation():
         ShardSpec(base=SetSpec(capacity=64), n_shards=3)
     with pytest.raises(ValueError, match="lane_factor"):
         ShardSpec(base=SetSpec(capacity=64), lane_factor=0)
+    # non-divisible totals round the per-shard pool UP to the next pow2
+    # (a 13-slot pool would break the pow2 table/bucket invariants);
+    # effective_capacity reports what was actually provisioned
     sp = ShardSpec(base=SetSpec(capacity=100), n_shards=8)
-    assert sp.shard_spec().capacity == 13       # ceil split
+    assert sp.per_shard_capacity == 16
+    assert sp.shard_spec().capacity == 16
+    assert sp.effective_capacity == 128
+    # even splits keep the exact quotient, pow2 or not
+    even = ShardSpec(base=SetSpec(capacity=1000), n_shards=2)
+    assert even.per_shard_capacity == 500
+    assert even.effective_capacity == 1000
 
 
 def test_facade_constructor_forms_agree():
